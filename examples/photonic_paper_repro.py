@@ -1,0 +1,57 @@
+"""Reproduce the paper's §V evaluation narrative on one model (CIFAR10 CNN):
+
+  dataflow compression (§III.C) → VDU decomposition (§IV.C) → device-level
+  pricing (Table 2) → comparison against the 7 baseline platforms (Figs 8-10),
+  plus the ablation the paper implies: what each SONIC mechanism contributes.
+
+Run:  PYTHONPATH=src python examples/photonic_paper_repro.py
+"""
+import jax
+
+from repro.models import cnn as cnn_lib
+from repro.photonic.accelerator import SonicAccelerator, SonicHWConfig
+from repro.photonic.baselines import evaluate_all
+from repro.photonic.mapper import cnn_workload
+
+
+def main():
+    cfg = cnn_lib.CIFAR10_CNN
+    params = cnn_lib.init_params(cfg, jax.random.PRNGKey(0))
+    ws = {f"conv{i}": 0.5 for i in range(6)} | {"fc0": 0.8}
+    work = cnn_workload(cfg, params, ws)
+
+    print("== workload after §III.C compression ==")
+    for w in work:
+        print(f"  {w.name:6s} {w.kind:4s} veclen={w.vec_len:5d} "
+              f"products={w.n_products:7d} reuse={w.reuse}")
+
+    print("\n== SONIC mechanism ablation (CIFAR10) ==")
+    variants = {
+        "full SONIC (5,50,50,10)": SonicHWConfig(),
+        "no clustering (16b DACs)": SonicHWConfig(weight_bits=16),
+        "no sparsity gating": SonicHWConfig(sparsity_gating=False),
+        "no compression": SonicHWConfig(compression=False),
+        "none (dense photonic)": SonicHWConfig(
+            weight_bits=16, sparsity_gating=False, compression=False
+        ),
+    }
+    print(f"{'variant':28s} {'FPS':>9s} {'W':>7s} {'FPS/W':>8s}")
+    for name, hw in variants.items():
+        r = SonicAccelerator(hw).evaluate(work)
+        print(f"{name:28s} {r.fps:9.1f} {r.power_w:7.2f} {r.fps_per_w:8.2f}")
+
+    print("\n== Figs 8–10 for CIFAR10 ==")
+    reports = evaluate_all(work)
+    print(f"{'platform':12s} {'FPS':>10s} {'W':>8s} {'FPS/W':>8s} {'EPB pJ/b':>9s}")
+    for n, r in reports.items():
+        print(f"{n:12s} {r.fps:10.1f} {r.power_w:8.2f} {r.fps_per_w:8.2f} "
+              f"{r.epb * 1e12:9.3f}")
+    s = reports["SONIC"]
+    print("\nSONIC advantage (FPS/W):")
+    for n, r in reports.items():
+        if n != "SONIC":
+            print(f"  vs {n:11s}: {s.fps_per_w / r.fps_per_w:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving with SONIC-compressed weights (the paper's deployment
+scenario): dense vs clustered vs block-sparse serving formats, with the
+Pallas kernels exercised directly on the hot matmul.
+
+Run:  PYTHONPATH=src python examples/serve_sparse.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import ClusteringConfig, cluster_params
+from repro.core.sparsity import SparsityConfig, apply_masks, build_masks
+from repro.kernels.sonic_matmul.ops import make_sonic_weight, sonic_matmul
+from repro.models.registry import get_arch
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.sharding.mesh import MeshPlan
+
+
+def main():
+    plan = MeshPlan()
+    arch = get_arch("internlm2-1.8b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+
+    # SONIC-ify: sparsify + cluster (the serving checkpoint transform)
+    masks = build_masks(params, SparsityConfig(target_sparsity=0.5, block=(8, 8)))
+    sonic_params, _ = cluster_params(
+        apply_masks(params, masks), ClusteringConfig(num_clusters=64)
+    )
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 256).astype(jnp.int32)
+    for name, p in [("dense", params), ("sonic (sparse+clustered)", sonic_params)]:
+        eng = ServeEngine(arch, p, plan, ServeConfig(max_len=96, temperature=0.0))
+        t0 = time.time()
+        out = eng.generate(prompts, 24)
+        out.block_until_ready()
+        dt = time.time() - t0
+        print(f"{name:26s}: {out.shape[0] * out.shape[1] / dt:7.1f} tok/s "
+              f"first tokens {np.asarray(out)[0, :6]}")
+
+    # the hot matmul through the fused Pallas kernel (interpret mode on CPU)
+    w = params["layers"]["ffn"]["wi"]["kernel"][0]
+    sw = make_sonic_weight(w, sparsity=0.5, block=(16, 16), num_clusters=64)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, w.shape[0]))
+    y_kernel = sonic_matmul(x, sw, bm=8)
+    y_dense = x @ sw.dense(jnp.float32)
+    err = float(jnp.abs(y_kernel - y_dense).max())
+    dense_bytes = w.size * 2
+    sonic_bytes = sw.idx_values.size + sw.indices.size * 4 + sw.codebook.size * 4
+    print(f"\nsonic_matmul kernel: max|Δ| vs densified = {err:.2e}; "
+          f"weight bytes {dense_bytes} → {sonic_bytes} "
+          f"({dense_bytes / sonic_bytes:.1f}x less HBM traffic)")
+
+
+if __name__ == "__main__":
+    main()

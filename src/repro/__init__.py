@@ -1,0 +1,13 @@
+"""repro — SONIC (sparse photonic NN inference accelerator) reproduced as a
+production-grade JAX framework.
+
+Layers:
+  repro.core      — the paper's contribution: sparsification, weight clustering,
+                    zero-compression dataflow, VDU decomposition.
+  repro.photonic  — the paper's evaluation simulator (device-parameter analytical model).
+  repro.models    — architecture zoo (10 assigned LM-family archs + the paper's CNNs).
+  repro.kernels   — Pallas TPU kernels for the compute hot-spots.
+  repro.sharding / train / serve / data / checkpoint / launch / roofline — substrate.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeSpec,
+    SHAPES,
+    ALL_ARCH_IDS,
+    get_config,
+    reduced_config,
+)

@@ -1,0 +1,57 @@
+"""Static-k contextual activation sparsity — the TPU adaptation of §III.C.
+
+SONIC's FC compression is driven by *dynamic* activation sparsity: whichever
+entries of x happen to be zero decide which weight columns are skipped.  XLA
+requires static shapes, so the executable TPU path fixes the kept count k per
+layer (k = ceil((1 - s) * d), s from observed activation-sparsity statistics,
+cf. paper Fig. 7) and keeps the k largest-magnitude activations.
+
+For batched execution a *shared* mask per batch is used (union-by-magnitude
+across the batch): per-row gathers would defeat MXU tiling.  This mirrors
+contextual-sparsity systems (Deja Vu) and is recorded as an adaptation in
+DESIGN.md §2.  For batch=1 (decode) it reduces to exactly the paper's rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_activation_mask(x: jax.Array, k: int) -> jax.Array:
+    """{0,1} mask keeping the k largest-|x| positions of the last axis.
+
+    Batched inputs get a shared mask: scores are summed |x| over leading axes.
+    """
+    d = x.shape[-1]
+    k = min(k, d)
+    scores = jnp.abs(x.astype(jnp.float32))
+    if x.ndim > 1:
+        scores = scores.sum(axis=tuple(range(x.ndim - 1)))
+    _, idx = jax.lax.top_k(scores, k)
+    mask = jnp.zeros((d,), x.dtype).at[idx].set(1)
+    return jnp.broadcast_to(mask, x.shape)
+
+
+def topk_compress(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Return (values, indices) of the shared top-k columns.
+
+    x: (..., d) → values (..., k) gathered at the shared indices, indices (k,).
+    """
+    d = x.shape[-1]
+    k = min(k, d)
+    scores = jnp.abs(x.astype(jnp.float32))
+    if x.ndim > 1:
+        scores = scores.reshape(-1, d).sum(axis=0)
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.take(x, idx, axis=-1), idx
+
+
+def sparse_ffn_matmul(x: jax.Array, w: jax.Array, k: int) -> jax.Array:
+    """Compressed x @ w keeping k input columns (shared across batch).
+
+    x: (..., d_in), w: (d_in, d_out).  Equals x @ w exactly when x has ≤ k
+    nonzero columns (the SONIC regime); otherwise it is the top-k approximation.
+    """
+    vals, idx = topk_compress(x, k)
+    w_rows = jnp.take(w, idx, axis=0)  # (k, d_out)
+    return vals @ w_rows

@@ -1,0 +1,197 @@
+"""C2 — Weight clustering (paper §III.B).
+
+Post-training quantization in the form of weight clustering, with
+*density-based* centroid initialization as in Deep Compression (Han et al.,
+arXiv:1510.00149): build the CDF of the weight values, split it into C
+equal-probability regions, and initialize one centroid per region.  k-means
+(Lloyd) iterations then confine every weight to one of C centroids, so the
+model ends up with C unique weights per tensor and the datapath only needs
+log2(C) bits of weight resolution — the mechanism by which SONIC gets away
+with 6-bit DACs (C ≤ 64).
+
+On TPU the same property is exploited as a *storage/bandwidth* win: weights are
+shipped as int8 cluster indices plus a tiny fp codebook, and the dequant is
+fused into the matmul kernel (``kernels/clustered_matmul``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import tree_map_with_path_names
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteringConfig:
+    """Clustering plan.
+
+    Attributes:
+      num_clusters: C.  The paper's exploration settles on C=16..64; 64 ⇒ 6-bit.
+      iters: Lloyd iterations (the centroid init is good, so few are needed).
+      exclude: layer-name substrings left unclustered (norms, biases; the
+        paper clusters weight matrices only).
+      preserve_zero: keep an exact 0.0 centroid so sparsity survives clustering
+        (required — clustering must not undo C1's zeros).
+    """
+
+    num_clusters: int = 64
+    iters: int = 10
+    exclude: tuple[str, ...] = ("norm", "scale", "bias", "embed_norm")
+    preserve_zero: bool = True
+
+    @property
+    def index_bits(self) -> int:
+        return max(int(np.ceil(np.log2(self.num_clusters))), 1)
+
+
+def density_based_centroids(w: jax.Array, num_clusters: int) -> jax.Array:
+    """CDF/equal-density centroid initialization (§III.B).
+
+    "A cumulative distribution function is built for the weights.  The
+    distribution is evenly divided into regions, based on the user specified
+    number of clusters.  The centroid weight values of the evenly distributed
+    regions are then deduced."
+
+    Implemented as the midpoint-quantiles of the empirical distribution:
+    centroid_i = quantile(w, (i + 0.5)/C) — each centroid owns an equal mass
+    of weights, which concentrates centroids where weight density is highest
+    (cf. linear init, which wastes centroids in empty tails).
+    """
+    probs = (jnp.arange(num_clusters, dtype=jnp.float32) + 0.5) / num_clusters
+    return jnp.quantile(w.astype(jnp.float32).reshape(-1), probs)
+
+
+@partial(jax.jit, static_argnames=("num_clusters", "iters", "preserve_zero"))
+def _kmeans_1d(
+    w_flat: jax.Array,
+    num_clusters: int,
+    iters: int,
+    preserve_zero: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """1-D Lloyd's k-means with density-based init. Returns (codebook, indices)."""
+    centroids = density_based_centroids(w_flat, num_clusters)
+
+    def assign(centroids: jax.Array) -> jax.Array:
+        # (n, 1) vs (C,) — for very large tensors this is chunked to bound memory.
+        def chunk_assign(chunk: jax.Array) -> jax.Array:
+            d = jnp.abs(chunk[:, None] - centroids[None, :])
+            return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+        n = w_flat.shape[0]
+        chunk = 1 << 16
+        if n <= chunk:
+            return chunk_assign(w_flat)
+        pad = (-n) % chunk
+        padded = jnp.pad(w_flat, (0, pad))
+        out = jax.lax.map(chunk_assign, padded.reshape(-1, chunk))
+        return out.reshape(-1)[:n]
+
+    def step(centroids: jax.Array, _unused: None) -> tuple[jax.Array, None]:
+        idx = assign(centroids)
+        sums = jax.ops.segment_sum(w_flat, idx, num_segments=num_clusters)
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(w_flat), idx, num_segments=num_clusters
+        )
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+        return new, None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
+    if preserve_zero:
+        # Snap the centroid nearest to zero onto exactly 0.0 so pruned weights
+        # remain exactly prunable after clustering.
+        zi = jnp.argmin(jnp.abs(centroids))
+        centroids = centroids.at[zi].set(0.0)
+    centroids = jnp.sort(centroids)
+    idx = assign(centroids)
+    return centroids, idx
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ClusteredWeight:
+    """A weight tensor stored as (int8 indices, fp32 codebook).
+
+    ``indices`` has the original tensor shape; ``codebook`` has shape (C,).
+    ``dense()`` reconstructs the clustered tensor.  This is the storage format
+    consumed by ``kernels/clustered_matmul``.
+    """
+
+    indices: jax.Array  # int8/int32, original shape
+    codebook: jax.Array  # (C,) float32
+
+    def dense(self, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+        return jnp.take(self.codebook, self.indices.astype(jnp.int32)).astype(dtype)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.indices.shape)
+
+    def tree_flatten(self):
+        return (self.indices, self.codebook), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def cluster_weights(
+    w: jax.Array, config: ClusteringConfig
+) -> tuple[jax.Array, ClusteredWeight]:
+    """Cluster one tensor.  Returns (clustered dense tensor, packed form)."""
+    flat = w.astype(jnp.float32).reshape(-1)
+    codebook, idx = _kmeans_1d(
+        flat, config.num_clusters, config.iters, config.preserve_zero
+    )
+    idx = idx.reshape(w.shape)
+    dtype = jnp.int8 if config.num_clusters <= 128 else jnp.int32
+    packed = ClusteredWeight(indices=idx.astype(dtype), codebook=codebook)
+    return packed.dense(w.dtype), packed
+
+
+def cluster_params(
+    params: Any, config: ClusteringConfig
+) -> tuple[Any, dict[str, ClusteredWeight]]:
+    """Cluster every eligible (rank>=2, non-excluded) tensor in a pytree.
+
+    Returns (params with clustered values substituted, {name: ClusteredWeight}).
+    """
+    packed: dict[str, ClusteredWeight] = {}
+
+    def one(name: str, w: jax.Array) -> jax.Array:
+        if w.ndim < 2 or any(pat in name for pat in config.exclude):
+            return w
+        dense, cw = cluster_weights(w, config)
+        packed[name] = cw
+        return dense
+
+    clustered = tree_map_with_path_names(one, params)
+    return clustered, packed
+
+
+def pack_clustered(w: jax.Array, config: ClusteringConfig) -> ClusteredWeight:
+    """Convenience: cluster + return only the packed form."""
+    _, packed = cluster_weights(w, config)
+    return packed
+
+
+def unpack_clustered(cw: ClusteredWeight, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    return cw.dense(dtype)
+
+
+def clustering_error(w: jax.Array, config: ClusteringConfig) -> float:
+    """Relative Frobenius reconstruction error — used by the DSE benchmark."""
+    dense, _ = cluster_weights(w, config)
+    num = jnp.linalg.norm((dense - w).astype(jnp.float32))
+    den = jnp.linalg.norm(w.astype(jnp.float32)) + 1e-12
+    return float(num / den)
+
+
+def storage_bits(shape: tuple[int, ...], config: ClusteringConfig) -> int:
+    """Bits to store a clustered tensor: n·log2(C) + C·32 (codebook)."""
+    n = int(np.prod(shape))
+    return n * config.index_bits + config.num_clusters * 32

@@ -1,0 +1,161 @@
+"""C3 — Zero-compression dataflow (paper §III.C).
+
+FC layers: the product W @ x wastes work on every x_j == 0.  SONIC identifies
+the zero entries of the activation vector and removes the *corresponding
+columns of W* before the dot product — the output is bit-exact because the
+dropped terms are exactly the zero contributions ("This process also does not
+impact the output vector calculation accuracy or output vector dimension").
+The compressed activation vector is dense; residual sparsity inside W's
+remaining columns is handled at the VDU by power-gating (C4 / kernels).
+
+CONV layers: the kernel and its input-feature-map patch are unrolled
+(im2col) into vector-dot-products, and the same column compression applies,
+producing dense *kernel* vectors with residual IF-map sparsity.
+
+Two execution styles:
+
+* ``compress_fc`` / ``compress_conv_patches`` — *dynamic* nnz (host/numpy or
+  non-jit jnp).  Faithful to the paper; used by the photonic simulator and by
+  correctness tests.
+* ``compressed_fc_matvec`` — *static-k* jit path (k = number of kept columns
+  fixed at trace time), the TPU adaptation used by ``kernels/sparse_matvec``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CompressedFC(NamedTuple):
+    """Result of FC zero-compression: dense activations + gathered columns."""
+
+    w_cols: jax.Array  # (d_out, nnz) — kept weight columns
+    x_nz: jax.Array  # (nnz,) — kept (nonzero) activations
+    idx: jax.Array  # (nnz,) — original column indices
+
+
+def compress_fc(w: np.ndarray | jax.Array, x: np.ndarray | jax.Array) -> CompressedFC:
+    """Dynamic (data-dependent shape) FC compression — Fig. 1(a)→(b).
+
+    Not jit-compatible (output shape depends on values); this is the faithful
+    reference used by tests and the photonic simulator's workload extraction.
+    """
+    w = np.asarray(w)
+    x = np.asarray(x)
+    if w.ndim != 2 or x.ndim != 1 or w.shape[1] != x.shape[0]:
+        raise ValueError(f"shape mismatch: W{w.shape} @ x{x.shape}")
+    idx = np.nonzero(x)[0]
+    return CompressedFC(
+        w_cols=jnp.asarray(w[:, idx]), x_nz=jnp.asarray(x[idx]), idx=jnp.asarray(idx)
+    )
+
+
+def compressed_fc_apply(c: CompressedFC) -> jax.Array:
+    """Evaluate the compressed product — equals W @ x exactly."""
+    return c.w_cols @ c.x_nz
+
+
+def compressed_fc_matvec(w: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """Static-k compressed matvec (jit-safe TPU adaptation).
+
+    Keeps the k largest-|x| entries (if x has ≤ k nonzeros this is exact —
+    the SONIC case, where sparsity is known from the previous layer's stats),
+    gathers the matching columns of W, and performs the dense small product.
+
+    w: (d_out, d_in), x: (d_in,) → (d_out,)
+    """
+    d_out, d_in = w.shape
+    k = min(k, d_in)
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    x_nz = jnp.take(x, idx)
+    w_cols = jnp.take(w, idx, axis=1)  # (d_out, k)
+    return w_cols @ x_nz
+
+
+def im2col(
+    ifmap: jax.Array, kh: int, kw: int, stride: int = 1, padding: int = 0
+) -> jax.Array:
+    """Unroll conv patches — Fig. 2(b).
+
+    ifmap: (H, W, C_in) → patches (n_patches, kh*kw*C_in), where
+    n_patches = out_h * out_w, rows ordered row-major over output pixels.
+    """
+    if ifmap.ndim != 3:
+        raise ValueError(f"expected (H, W, C), got {ifmap.shape}")
+    if padding:
+        ifmap = jnp.pad(ifmap, ((padding, padding), (padding, padding), (0, 0)))
+    h, w, c = ifmap.shape
+    out_h = (h - kh) // stride + 1
+    out_w = (w - kw) // stride + 1
+    # gather patch windows via broadcasted indexing (pure jnp, jit-safe)
+    i0 = jnp.arange(out_h) * stride
+    j0 = jnp.arange(out_w) * stride
+    di = jnp.arange(kh)
+    dj = jnp.arange(kw)
+    rows = i0[:, None, None, None] + di[None, None, :, None]  # (oh,1,kh,1)
+    cols = j0[None, :, None, None] + dj[None, None, None, :]  # (1,ow,1,kw)
+    patches = ifmap[rows, cols]  # (oh, ow, kh, kw, c)
+    return patches.reshape(out_h * out_w, kh * kw * c)
+
+
+def conv2d_via_im2col(
+    ifmap: jax.Array,
+    kernel: jax.Array,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """Conv as matmul over unrolled patches (the paper's CONV dataflow).
+
+    ifmap: (H, W, C_in); kernel: (kh, kw, C_in, C_out) → (out_h, out_w, C_out).
+    """
+    kh, kw, c_in, c_out = kernel.shape
+    cols = im2col(ifmap, kh, kw, stride, padding)  # (P, kh*kw*c_in)
+    wmat = kernel.reshape(kh * kw * c_in, c_out)
+    out = cols @ wmat  # (P, C_out)
+    h = ifmap.shape[0] + 2 * padding
+    w = ifmap.shape[1] + 2 * padding
+    out_h = (h - kh) // stride + 1
+    out_w = (w - kw) // stride + 1
+    return out.reshape(out_h, out_w, c_out)
+
+
+class CompressedConv(NamedTuple):
+    """Conv compression result: dense kernel vectors + compressed patches."""
+
+    patches: jax.Array  # (n_patches, nnz)
+    kernel_rows: jax.Array  # (nnz, C_out)
+    idx: jax.Array  # (nnz,)
+
+
+def compress_conv_patches(
+    ifmap: np.ndarray | jax.Array,
+    kernel: np.ndarray | jax.Array,
+    stride: int = 1,
+    padding: int = 0,
+) -> CompressedConv:
+    """CONV zero-compression — Fig. 2(b)→(c).
+
+    After unrolling, kernel *rows* that are entirely zero (a pruned kernel
+    position across all output channels) are dropped together with the
+    corresponding patch columns — generating dense kernel vectors, with the
+    residual IF-map sparsity left for the VDU to gate.  Dynamic-shape; not jit.
+    """
+    kernel = np.asarray(kernel)
+    kh, kw, c_in, c_out = kernel.shape
+    cols = np.asarray(im2col(jnp.asarray(ifmap), kh, kw, stride, padding))
+    wmat = kernel.reshape(kh * kw * c_in, c_out)
+    keep = np.nonzero(np.any(wmat != 0, axis=1))[0]
+    return CompressedConv(
+        patches=jnp.asarray(cols[:, keep]),
+        kernel_rows=jnp.asarray(wmat[keep]),
+        idx=jnp.asarray(keep),
+    )
+
+
+def compressed_conv_apply(c: CompressedConv, out_h: int, out_w: int) -> jax.Array:
+    """Evaluate the compressed conv — equals conv2d_via_im2col exactly."""
+    out = c.patches @ c.kernel_rows
+    return out.reshape(out_h, out_w, -1)

@@ -1,0 +1,172 @@
+"""SonicLinear — the one switchable linear layer every model routes through.
+
+Execution paths (selected per-layer by ``SonicExecutionConfig``):
+
+  dense         x @ W                                   (baseline)
+  masked        x @ (W ⊙ mask)                          (sparsity-aware training)
+  clustered     clustered-matmul kernel: int8 cluster indices + codebook,
+                dequant fused in VMEM                   (C2 serving path)
+  block_sparse  block-sparse kernel: only nonzero MXU-tile blocks streamed
+                                                        (C1+C4 serving path)
+  topk          activation-compressed matmul (static-k column gather)
+                                                        (C3 serving path)
+
+Each path has a pure-jnp fallback (used on CPU and as the oracle); the Pallas
+kernels in ``repro.kernels`` are engaged with ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activation_sparsity import sparse_ffn_matmul
+from repro.core.clustering import ClusteredWeight
+
+Mode = Literal["dense", "masked", "clustered", "block_sparse", "topk"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockSparseWeight:
+    """Balanced block-sparse weight for x[.., K] @ W[K, N].
+
+    W is partitioned into (bk × bn) blocks on a (Kb × Nb) grid; every output
+    column-block keeps the same number r of nonzero K-blocks (balanced — the
+    hardware-friendly constraint that replaces SONIC's per-wavelength gating
+    with per-MXU-tile gating).
+
+      values:  (Nb, r, bk, bn)   kept blocks, dense inside
+      indices: (Nb, r) int32     which K-block each kept block came from
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    k_blocks: int  # Kb (static)
+
+    def tree_flatten(self):
+        return (self.values, self.indices), self.k_blocks
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def block_shape(self) -> tuple[int, int]:
+        return self.values.shape[2], self.values.shape[3]
+
+    @property
+    def dense_shape(self) -> tuple[int, int]:
+        bk, bn = self.block_shape
+        return self.k_blocks * bk, self.values.shape[0] * bn
+
+    def dense(self, dtype=jnp.float32) -> jax.Array:
+        nb, r, bk, bn = self.values.shape
+        k, n = self.dense_shape
+        out = jnp.zeros((self.k_blocks, nb, bk, bn), dtype)
+        out = out.at[self.indices, jnp.arange(nb)[:, None]].set(
+            self.values.astype(dtype)
+        )
+        return out.transpose(0, 2, 1, 3).reshape(k, n)
+
+
+def make_block_sparse(
+    w: jax.Array, sparsity: float, block: tuple[int, int]
+) -> BlockSparseWeight:
+    """Balanced block-prune W[K, N]: keep top-r L1-norm K-blocks per N-block."""
+    k, n = w.shape
+    bk, bn = block
+    if k % bk or n % bn:
+        raise ValueError(f"{w.shape} not divisible by block {block}")
+    kb, nb = k // bk, n // bn
+    r = max(int(round(kb * (1.0 - sparsity))), 1)
+    blocks = w.reshape(kb, bk, nb, bn).transpose(2, 0, 1, 3)  # (nb, kb, bk, bn)
+    norms = jnp.abs(blocks.astype(jnp.float32)).sum(axis=(-2, -1))  # (nb, kb)
+    _, idx = jax.lax.top_k(norms, r)  # (nb, r)
+    idx = jnp.sort(idx, axis=1)  # ascending K order → sequential HBM streaming
+    vals = jnp.take_along_axis(blocks, idx[:, :, None, None], axis=1)
+    return BlockSparseWeight(values=vals, indices=idx.astype(jnp.int32), k_blocks=kb)
+
+
+@dataclasses.dataclass(frozen=True)
+class SonicExecutionConfig:
+    mode: Mode = "dense"
+    use_kernel: bool = False  # engage Pallas kernels (interpret on CPU)
+    topk_frac: float = 0.25  # kept fraction for the "topk" path
+    block: tuple[int, int] = (128, 128)
+    weight_sparsity: float = 0.75
+    num_clusters: int = 64
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SonicLinearParams:
+    """Union container — exactly one representation is populated."""
+
+    w: jax.Array | None = None  # (K, N) dense or masked
+    clustered: ClusteredWeight | None = None
+    block_sparse: BlockSparseWeight | None = None
+
+    def tree_flatten(self):
+        return (self.w, self.clustered, self.block_sparse), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def sonic_linear_apply(
+    params: SonicLinearParams,
+    x: jax.Array,
+    config: SonicExecutionConfig,
+) -> jax.Array:
+    """Apply y = x @ W through the configured execution path.
+
+    x: (..., K) → (..., N).
+    """
+    mode = config.mode
+    if mode in ("dense", "masked"):
+        assert params.w is not None
+        return x @ params.w.astype(x.dtype)
+
+    if mode == "topk":
+        assert params.w is not None
+        k = max(int(round(config.topk_frac * params.w.shape[0])), 1)
+        return sparse_ffn_matmul(x, params.w.astype(x.dtype), k)
+
+    if mode == "clustered":
+        assert params.clustered is not None
+        cw = params.clustered
+        if config.use_kernel:
+            from repro.kernels.clustered_matmul import ops as cm_ops
+
+            return cm_ops.clustered_matmul(x, cw.indices, cw.codebook)
+        return x @ cw.dense(x.dtype)
+
+    if mode == "block_sparse":
+        assert params.block_sparse is not None
+        bs = params.block_sparse
+        if config.use_kernel:
+            from repro.kernels.block_sparse_matmul import ops as bs_ops
+
+            return bs_ops.block_sparse_matmul(x, bs)
+        return x @ bs.dense(x.dtype)
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def convert_linear(
+    w: jax.Array, config: SonicExecutionConfig
+) -> SonicLinearParams:
+    """Convert a trained dense W[K, N] into the configured serving format."""
+    if config.mode == "clustered":
+        from repro.core.clustering import ClusteringConfig, pack_clustered
+
+        cw = pack_clustered(w, ClusteringConfig(num_clusters=config.num_clusters))
+        return SonicLinearParams(clustered=cw)
+    if config.mode == "block_sparse":
+        bs = make_block_sparse(w, config.weight_sparsity, config.block)
+        return SonicLinearParams(block_sparse=bs)
+    return SonicLinearParams(w=w)

@@ -1,0 +1,215 @@
+"""C1 — Model sparsification (paper §III.A).
+
+SONIC adapts the layer-wise, sparsity-aware training approach of Zhu & Gupta
+("To prune, or not to prune", arXiv:1710.01878): every layer selected for
+sparsification carries a binary mask of the weight tensor's shape; weights are
+sorted by absolute value and the smallest-magnitude entries are masked to zero
+until the layer's target sparsity is reached.  Sparsity is ramped over training
+with the cubic schedule from the same paper, and an L2 term keeps surviving
+weights small.
+
+Two structural variants are produced by the same machinery:
+
+* ``magnitude_prune_mask``  — unstructured, exactly the paper's method.  Used by
+  the photonic simulator (a VCSEL can be gated per scalar / per wavelength).
+* ``block_prune_mask``      — block-structured at MXU-tile granularity.  This is
+  the TPU adaptation: the unit of "power gating" moves from one wavelength to
+  one (bm × bn) tile so the systolic array can actually skip the work
+  (see DESIGN.md §2).  Consumed by ``kernels/block_sparse_matmul``.
+
+All functions are pure and jit-friendly unless stated otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import tree_map_with_path_names
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Per-model sparsification plan.
+
+    Attributes:
+      target_sparsity: final fraction of zeros per sparsified layer, in [0, 1).
+      per_layer: optional {layer-name-substring: sparsity} overrides.  The paper
+        sparsifies layer-wise "to avoid overly sparsifying sensitive layers";
+        embedding / lm_head / norm layers default to 0.
+      block: (bm, bn) block shape for the structured variant; (1, 1) means
+        unstructured.
+      ramp_start_step / ramp_end_step: cubic Zhu & Gupta schedule endpoints.
+      exclude: name substrings never pruned (norms, biases, embeddings by
+        default — pruning embeddings indiscriminately is what §III.A warns
+        against).
+    """
+
+    target_sparsity: float = 0.8
+    per_layer: Mapping[str, float] | None = None
+    block: tuple[int, int] = (1, 1)
+    ramp_start_step: int = 0
+    ramp_end_step: int = 1000
+    exclude: Sequence[str] = (
+        "embed", "norm", "scale", "bias", "lm_head", "codebook",
+        "router", "conv_w", "conv_b", "decay_lora", "mu", "ln_x",
+    )
+
+    def layer_target(self, name: str) -> float:
+        for pat in self.exclude:
+            if pat in name:
+                return 0.0
+        if self.per_layer:
+            for pat, level in self.per_layer.items():
+                if pat in name:
+                    return float(level)
+        return float(self.target_sparsity)
+
+
+def gradual_sparsity_schedule(
+    step: jax.Array | int,
+    final_sparsity: float,
+    start_step: int,
+    end_step: int,
+    initial_sparsity: float = 0.0,
+) -> jax.Array:
+    """Cubic sparsity ramp s_t = s_f + (s_i - s_f) (1 - (t-t0)/(t1-t0))^3.
+
+    Zhu & Gupta eq. (1).  Clamped outside [start_step, end_step].
+    """
+    step = jnp.asarray(step, jnp.float32)
+    span = max(end_step - start_step, 1)
+    frac = jnp.clip((step - start_step) / span, 0.0, 1.0)
+    return final_sparsity + (initial_sparsity - final_sparsity) * (1.0 - frac) ** 3
+
+
+def approx_quantile(x: jax.Array, q: jax.Array | float, bins: int = 2048) -> jax.Array:
+    """Two-pass histogram quantile of a 1-D array — O(n), sort-free.
+
+    ``jnp.quantile`` lowers to a full sort, which is hostile to SPMD at
+    314B-parameter scale (mask refresh runs in-graph every N train steps).
+    Pass 1 brackets the quantile in one of ``bins`` uniform bins; pass 2
+    re-bins inside the bracket.  Worst-case error ≈ range/bins² of the value
+    distribution — ≪ any sparsity-target tolerance.
+    """
+    x = x.reshape(-1).astype(jnp.float32)
+    n = x.shape[0]  # may exceed int32 (stacked 81-layer zamba2 leaves: 4.3e9)
+    q = jnp.clip(jnp.asarray(q, jnp.float32), 0.0, 1.0)
+    target = q * jnp.float32(n)
+
+    def bracket(lo, hi):
+        width = jnp.maximum(hi - lo, 1e-30)
+        idx = jnp.clip(((x - lo) / width * bins).astype(jnp.int32), 0, bins - 1)
+        hist = jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+        cdf = jnp.cumsum(hist)
+        b = jnp.searchsorted(cdf, target)  # first bin where cdf ≥ target
+        b = jnp.clip(b, 0, bins - 1)
+        return lo + b * width / bins, lo + (b + 1) * width / bins
+
+    lo, hi = jnp.min(x), jnp.max(x)
+    l1, h1 = bracket(lo, hi)
+    l2, h2 = bracket(l1, h1)
+    return 0.5 * (l2 + h2)
+
+
+def magnitude_prune_mask(w: jax.Array, sparsity: jax.Array | float) -> jax.Array:
+    """Unstructured magnitude mask: zero out the smallest-|w| fraction.
+
+    Exactly the paper's §III.A rule ("weights ... sorted by their absolute
+    values and the smallest magnitude weights are masked to zero until the
+    user-specified sparsity levels are reached"), with the sort replaced by a
+    histogram-quantile threshold (O(n), SPMD-friendly — see approx_quantile).
+    Returns a {0,1} mask of w's shape with w.dtype.
+    """
+    mag = jnp.abs(w).astype(jnp.float32)
+    sparsity = jnp.clip(jnp.asarray(sparsity, jnp.float32), 0.0, 1.0 - 1e-7)
+    thresh = approx_quantile(mag, sparsity)
+    keep = mag > thresh
+    keep = jnp.where(sparsity <= 0.0, jnp.ones_like(keep), keep)
+    return keep.astype(w.dtype)
+
+
+def block_prune_mask(
+    w: jax.Array, sparsity: jax.Array | float, block: tuple[int, int]
+) -> jax.Array:
+    """Block-structured magnitude mask on the trailing two dims.
+
+    Blocks are ranked by their L1 norm; the lowest-norm fraction is zeroed.
+    ``w``'s trailing dims must be divisible by ``block``.  Leading dims (e.g.
+    experts) are pruned independently.
+    """
+    bm, bn = block
+    if bm == 1 and bn == 1:
+        return magnitude_prune_mask(w, sparsity)
+    *lead, m, n = w.shape
+    if m % bm or n % bn:
+        # non-tile-aligned tensors (routers, depthwise convs, odd head dims)
+        # fall back to the unstructured rule rather than failing
+        return magnitude_prune_mask(w, sparsity)
+    gm, gn = m // bm, n // bn
+    wb = jnp.abs(w.astype(jnp.float32)).reshape(*lead, gm, bm, gn, bn)
+    norms = wb.sum(axis=(-3, -1))  # (*lead, gm, gn)
+    flat = norms.reshape(*lead, gm * gn)
+    sparsity = jnp.clip(jnp.asarray(sparsity, jnp.float32), 0.0, 1.0 - 1e-7)
+    thresh = jnp.quantile(flat, sparsity, axis=-1, keepdims=True)
+    keep_blocks = (flat > thresh) | (sparsity <= 0.0)
+    keep_blocks = keep_blocks.reshape(*lead, gm, 1, gn, 1)
+    mask = jnp.broadcast_to(keep_blocks, (*lead, gm, bm, gn, bn))
+    return mask.reshape(w.shape).astype(w.dtype)
+
+
+def build_masks(
+    params: Any,
+    config: SparsityConfig,
+    step: jax.Array | int | None = None,
+) -> Any:
+    """Build a mask pytree matching ``params``.
+
+    Only rank>=2 leaves whose resolved layer target is > 0 get a non-trivial
+    mask; everything else gets an all-ones mask (kept in the tree so the pytree
+    structure matches and the optimizer can consume it uniformly).
+
+    If ``step`` is given, the per-layer target is scaled by the gradual
+    schedule, which is how sparsity-aware *training* uses this function.
+    """
+
+    def one(name: str, w: jax.Array) -> jax.Array:
+        target = config.layer_target(name)
+        if w.ndim < 2 or target <= 0.0:
+            return jnp.ones_like(w)
+        if step is not None:
+            target = gradual_sparsity_schedule(
+                step, target, config.ramp_start_step, config.ramp_end_step
+            )
+        return block_prune_mask(w, target, config.block)
+
+    return tree_map_with_path_names(one, params)
+
+
+def apply_masks(params: Any, masks: Any) -> Any:
+    """Elementwise params * masks (the forward-graph masking of §III.A)."""
+    return jax.tree_util.tree_map(lambda w, m: w * m, params, masks)
+
+
+def sparsity_of(x: jax.Array | np.ndarray, atol: float = 0.0) -> float:
+    """Fraction of zeros in x (host-side convenience)."""
+    x = np.asarray(x)
+    if atol > 0:
+        return float(np.mean(np.abs(x) <= atol))
+    return float(np.mean(x == 0))
+
+
+def l2_regularization(params: Any, exclude: Sequence[str] = ("norm", "bias", "scale")) -> jax.Array:
+    """L2 term the paper adds "to encourage smaller weight values" (§III.A)."""
+
+    def term(name: str, w: jax.Array) -> jax.Array:
+        for pat in exclude:
+            if pat in name:
+                return jnp.zeros((), jnp.float32)
+        return jnp.sum(jnp.square(w.astype(jnp.float32)))
+
+    terms = tree_map_with_path_names(term, params)
+    return sum(jax.tree_util.tree_leaves(terms), jnp.zeros((), jnp.float32))

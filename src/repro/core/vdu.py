@@ -1,0 +1,97 @@
+"""C4 — Vector-dot-product-unit (VDU) decomposition + photonic fidelity model.
+
+The SONIC optical core is an array of VDUs: N conv-VDUs computing n×n dot
+products and K FC-VDUs computing m×m dot products (§IV.C, best config
+(n, m, N, K) = (5, 50, 50, 10)).  Long vectors are decomposed into n- or
+m-element chunks; each chunk is one optical pass (VCSEL → MR bank →
+broadband-BN-MR → photodetector), and partial sums are accumulated
+electronically.
+
+Two things live here:
+
+* ``decompose_matvec`` — the scheduling decomposition (how many VDU passes a
+  given compressed workload costs).  The photonic simulator prices these.
+* ``photonic_forward`` — a *fidelity* model: quantize activations to the DAC
+  resolution, weights to their cluster centroids, optionally inject MR/PD
+  noise, and compute the dot product the way the optical pipeline would.  Used
+  to check that 6-bit weight / 16-bit activation resolution preserves accuracy
+  (the paper's Table 3 argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VDUConfig:
+    """(n, m, N, K) from §IV.C plus DAC resolutions from §V.A."""
+
+    n: int = 5  # conv-VDU dot-product width
+    m: int = 50  # FC-VDU dot-product width
+    N: int = 50  # number of conv VDUs
+    K: int = 10  # number of FC VDUs
+    weight_bits: int = 6  # 6-bit DAC (≤64 clusters)
+    activation_bits: int = 16  # 16-bit DAC
+
+    def conv_passes(self, vec_len: int, n_products: int) -> int:
+        """Optical passes to do ``n_products`` dot products of length vec_len."""
+        chunks = math.ceil(max(vec_len, 1) / self.n)
+        return math.ceil(n_products * chunks / self.N)
+
+    def fc_passes(self, vec_len: int, n_products: int) -> int:
+        chunks = math.ceil(max(vec_len, 1) / self.m)
+        return math.ceil(n_products * chunks / self.K)
+
+
+def decompose_matvec(d_out: int, d_in: int, width: int, units: int) -> tuple[int, int]:
+    """(chunks_per_row, sequential_passes) for a d_out×d_in matvec on
+    ``units`` VDUs of dot-width ``width``."""
+    chunks = math.ceil(max(d_in, 1) / width)
+    passes = math.ceil(d_out * chunks / max(units, 1))
+    return chunks, passes
+
+
+def quantize_uniform(x: jax.Array, bits: int, x_max: jax.Array | None = None) -> jax.Array:
+    """Symmetric uniform quantization to ``bits`` levels (DAC model)."""
+    if x_max is None:
+        x_max = jnp.max(jnp.abs(x)) + 1e-12
+    levels = 2 ** (bits - 1) - 1
+    scale = x_max / levels
+    return jnp.round(x / scale).clip(-levels, levels) * scale
+
+
+def photonic_forward(
+    w: jax.Array,
+    x: jax.Array,
+    config: VDUConfig,
+    codebook: jax.Array | None = None,
+    noise_std: float = 0.0,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Fidelity model of one VDU-array matvec: W @ x under photonic constraints.
+
+    * weights: if ``codebook`` given, snapped to cluster centroids (the MR can
+      only be tuned to one of C levels — §III.B); else uniform-quantized to
+      ``weight_bits``.
+    * activations: uniform-quantized to ``activation_bits`` (VCSEL DAC).
+    * optional multiplicative Gaussian noise models MR tuning / PD shot noise.
+    * accumulation is exact (photodetector integrates; electronic partial-sum
+      accumulation is digital).
+    """
+    if codebook is not None:
+        flat = w.reshape(-1)
+        idx = jnp.argmin(jnp.abs(flat[:, None] - codebook[None, :]), axis=1)
+        wq = jnp.take(codebook, idx).reshape(w.shape)
+    else:
+        wq = quantize_uniform(w, config.weight_bits)
+    xq = quantize_uniform(x, config.activation_bits)
+    prod = wq * xq  # one wavelength per (row, chunk-lane) product
+    if noise_std > 0.0:
+        if key is None:
+            raise ValueError("noise_std > 0 requires a PRNG key")
+        prod = prod * (1.0 + noise_std * jax.random.normal(key, prod.shape))
+    return prod.sum(axis=-1)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import SyntheticLM, make_batch_fn
+from repro.data.teacher import TeacherTask

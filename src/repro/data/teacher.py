@@ -1,0 +1,50 @@
+"""Teacher-labelled synthetic classification tasks.
+
+No image datasets exist offline (DESIGN.md §7), so the paper's accuracy
+experiments (Tables 1/3, Fig. 6) run on procedurally generated tasks: a
+frozen random "teacher" CNN labels random inputs, and the student CNN (the
+paper's architecture) is trained/sparsified/clustered against those labels.
+Accuracy *retention* under sparsification+clustering — the paper's actual
+claim — is measured exactly as in §V.A.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cnn as cnn_lib
+
+
+@dataclasses.dataclass
+class TeacherTask:
+    cfg: cnn_lib.CNNConfig
+    seed: int = 42
+
+    def __post_init__(self):
+        key = jax.random.PRNGKey(self.seed)
+        # a *small* teacher of the same input/output shape keeps the task
+        # learnable by the student within CPU budgets
+        self.teacher_cfg = dataclasses.replace(
+            self.cfg,
+            conv_channels=tuple(min(c, 16) for c in self.cfg.conv_channels[:2]),
+            pool_after=tuple(p for p in self.cfg.pool_after if p < 2),
+            fc_dims=(),
+        )
+        self.teacher_params = cnn_lib.init_params(self.teacher_cfg, key)
+
+    def batch(self, step: int, batch_size: int = 64) -> tuple[jax.Array, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+        x = jax.random.normal(key, (batch_size, *self.cfg.input_hw))
+        logits = cnn_lib.forward(self.teacher_params, self.teacher_cfg, x)
+        return x, jnp.argmax(logits, -1)
+
+    def accuracy(self, params, n_batches: int = 8, batch_size: int = 128) -> float:
+        correct = total = 0
+        for i in range(n_batches):
+            x, y = self.batch(10_000 + i, batch_size)
+            pred = jnp.argmax(cnn_lib.forward(params, self.cfg, x), -1)
+            correct += int((pred == y).sum())
+            total += batch_size
+        return correct / total

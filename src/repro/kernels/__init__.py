@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for SONIC's compute hot-spots.
+
+clustered_matmul     — C2: weights as int8 cluster indices + codebook; dequant
+                       fused into the MXU matmul in VMEM (the TPU analogue of
+                       the 6-bit DAC driving the MR bank).
+block_sparse_matmul  — C1+C4: balanced block-sparse weights; only nonzero
+                       MXU-tile blocks are streamed HBM→VMEM (the TPU analogue
+                       of VCSEL power gating, at tile granularity).
+sparse_matvec        — C3: the FC zero-compression dataflow; gathered weight
+                       rows × dense compressed activations.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper; interpret=True on CPU), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for block_sparse_matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_sparse_matmul_ref(
+    x: jax.Array,  # (M, K)
+    values: jax.Array,  # (Nb, R, bk, bn) kept blocks
+    indices: jax.Array,  # (Nb, R) int32 K-block ids
+    k_blocks: int,
+) -> jax.Array:
+    """y = x @ dense(W_bs) with fp32 accumulation (densify-then-matmul)."""
+    nb, r, bk, bn = values.shape
+    k, n = k_blocks * bk, nb * bn
+    w = jnp.zeros((k_blocks, nb, bk, bn), jnp.float32)
+    w = w.at[indices, jnp.arange(nb)[:, None]].set(values.astype(jnp.float32))
+    w = w.transpose(0, 2, 1, 3).reshape(k, n)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

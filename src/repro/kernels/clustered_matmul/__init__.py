@@ -1,0 +1,1 @@
+from repro.kernels.clustered_matmul.ops import clustered_matmul

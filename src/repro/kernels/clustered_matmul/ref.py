@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for clustered_matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clustered_matmul_ref(
+    x: jax.Array,  # (M, K)
+    indices: jax.Array,  # (K, N) int8/int32 cluster ids
+    codebook: jax.Array,  # (C,) fp32 centroids
+) -> jax.Array:
+    """y = x @ codebook[indices], fp32 accumulation, y in x.dtype."""
+    w = jnp.take(codebook, indices.astype(jnp.int32)).astype(x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.sonic_matmul.ops import sonic_matmul, make_sonic_weight

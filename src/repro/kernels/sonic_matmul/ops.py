@@ -1,0 +1,87 @@
+"""Public wrapper + weight converter for the fused SONIC matmul."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import ClusteringConfig, cluster_weights
+from repro.core.sonic_layers import make_block_sparse
+from repro.kernels.sonic_matmul.kernel import sonic_matmul_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SonicWeight:
+    """Block-sparse + clustered weight: the full serving-format tensor."""
+
+    idx_values: jax.Array  # (Nb, R, bk, bn) int8 cluster ids
+    codebook: jax.Array  # (C,) fp32
+    indices: jax.Array  # (Nb, R) int32 K-block ids
+    k_blocks: int
+
+    def tree_flatten(self):
+        return (self.idx_values, self.codebook, self.indices), self.k_blocks
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, k_blocks=aux)
+
+    @property
+    def dense_shape(self):
+        nb, r, bk, bn = self.idx_values.shape
+        return self.k_blocks * bk, nb * bn
+
+    def dense(self, dtype=jnp.float32) -> jax.Array:
+        from repro.kernels.sonic_matmul.ref import sonic_matmul_ref
+
+        k, _ = self.dense_shape
+        eye = jnp.eye(k, dtype=jnp.float32)
+        return sonic_matmul_ref(
+            eye, self.idx_values, self.codebook, self.indices, self.k_blocks
+        ).astype(dtype)
+
+
+def make_sonic_weight(
+    w: jax.Array,  # (K, N) trained dense weight
+    sparsity: float = 0.75,
+    block: tuple[int, int] = (128, 128),
+    num_clusters: int = 64,
+) -> SonicWeight:
+    """Dense → SONIC serving format: cluster first (C2, preserve_zero), then
+    balanced block-prune (C1), storing kept blocks as cluster ids."""
+    clustered, cw = cluster_weights(w, ClusteringConfig(num_clusters=num_clusters))
+    bs = make_block_sparse(clustered, sparsity, block)
+    # map kept block values back to cluster indices
+    flat = bs.values.reshape(-1)
+    ids = jnp.argmin(
+        jnp.abs(flat[:, None] - cw.codebook[None, :]), axis=1
+    ).astype(jnp.int8)
+    return SonicWeight(
+        idx_values=ids.reshape(bs.values.shape),
+        codebook=cw.codebook,
+        indices=bs.indices,
+        k_blocks=bs.k_blocks,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def sonic_matmul(x: jax.Array, w: SonicWeight, *, bm: int = 256) -> jax.Array:
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm_eff = min(bm, max(8, m))
+    pad_m = (-m) % bm_eff
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+    y = sonic_matmul_pallas(
+        x2, w.idx_values, w.codebook, w.indices, bm=bm_eff, interpret=not _ON_TPU
+    )
+    if pad_m:
+        y = y[:m]
+    return y.reshape(*lead, w.dense_shape[1]).astype(x.dtype)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused sonic_matmul (block-sparse + clustered)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sonic_matmul_ref(
+    x: jax.Array,  # (M, K)
+    idx_values: jax.Array,  # (Nb, R, bk, bn) int8 cluster ids of kept blocks
+    codebook: jax.Array,  # (C,) fp32
+    indices: jax.Array,  # (Nb, R) int32 K-block ids
+    k_blocks: int,
+) -> jax.Array:
+    values = jnp.take(codebook, idx_values.astype(jnp.int32))
+    nb, r, bk, bn = values.shape
+    k, n = k_blocks * bk, nb * bn
+    w = jnp.zeros((k_blocks, nb, bk, bn), jnp.float32)
+    w = w.at[indices, jnp.arange(nb)[:, None]].set(values)
+    w = w.transpose(0, 2, 1, 3).reshape(k, n)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

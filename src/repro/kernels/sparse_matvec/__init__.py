@@ -1,0 +1,1 @@
+from repro.kernels.sparse_matvec.ops import sparse_matvec, topk_sparse_matmul

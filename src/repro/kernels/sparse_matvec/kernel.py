@@ -1,0 +1,68 @@
+"""Compressed sparse matvec Pallas kernel — SONIC's FC dataflow (§III.C).
+
+y[B, N] = Σ_c x_nz[:, c] · Wt[idx[c], :]
+
+This is the zero-compression product of Fig. 1(b): the activation vector is
+dense after compression (x_nz), and only the weight rows the surviving
+activations touch are read.  Wt is stored input-major (K, N) so each gathered
+row is a contiguous HBM stripe; the BlockSpec index map reads ``idx`` via
+scalar prefetch, so — like the photonic VDU that never fires a VCSEL for a
+zero — untouched weight rows are never DMA'd.
+
+Grid = (N/bn, knz/bc): each step gathers a (bc, bn) row-bundle.  Row bundles
+require ``idx`` to be *bundle-contiguous*: ops.py rounds the kept set up to
+multiples of bc and sorts, so a bundle's rows live in one (bc-aligned) block.
+To keep the gather exact for arbitrary index sets, bc = 1 by default (one row
+per step, (1, bn) stripes); larger bc is available when the caller guarantees
+block-aligned sparsity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, w_ref, o_ref, *, nc: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (B, 1) × (1, bn) outer-product accumulate (VPU path; B is the sublane dim)
+    o_ref[...] += x_ref[...].astype(jnp.float32) * w_ref[...].astype(jnp.float32)
+
+
+def sparse_matvec_pallas(
+    x_nz: jax.Array,  # (B, knz)
+    idx: jax.Array,  # (knz,) int32
+    wt: jax.Array,  # (K, N)
+    *,
+    bn: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns y (B, N) fp32."""
+    b, knz = x_nz.shape
+    k, n = wt.shape
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // bn, knz),
+        in_specs=[
+            pl.BlockSpec((b, 1), lambda j, c, idx: (0, c)),
+            pl.BlockSpec((1, bn), lambda j, c, idx: (idx[c], j)),
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j, c, idx: (0, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, nc=knz),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(idx, x_nz, wt)

@@ -1,0 +1,46 @@
+"""Public wrappers: compressed matvec + the full top-k compress-then-multiply
+op (SONIC §III.C as one jit'd call)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_matvec.kernel import sparse_matvec_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def sparse_matvec(
+    x_nz: jax.Array,  # (B, knz) or (knz,)
+    idx: jax.Array,  # (knz,) int32
+    wt: jax.Array,  # (K, N)
+    *,
+    bn: int = 512,
+) -> jax.Array:
+    squeeze = x_nz.ndim == 1
+    if squeeze:
+        x_nz = x_nz[None]
+    y = sparse_matvec_pallas(x_nz, idx.astype(jnp.int32), wt, bn=bn,
+                             interpret=not _ON_TPU)
+    y = y.astype(x_nz.dtype)
+    return y[0] if squeeze else y
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn"))
+def topk_sparse_matmul(
+    x: jax.Array,  # (B, K) activations (possibly sparse)
+    wt: jax.Array,  # (K, N)
+    k: int,
+    *,
+    bn: int = 512,
+) -> jax.Array:
+    """Fused: shared top-k compression (batch-union magnitude) + compressed
+    product.  Equals x @ wt exactly when x has ≤ k nonzero columns."""
+    scores = jnp.abs(x.astype(jnp.float32)).sum(0)
+    _, idx = jax.lax.top_k(scores, min(k, x.shape[1]))
+    idx = jnp.sort(idx)  # ascending → quasi-sequential HBM stripes
+    x_nz = jnp.take(x, idx, axis=1)
+    return sparse_matvec(x_nz, idx, wt, bn=bn)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the compressed (gathered-row) sparse matvec."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_matvec_ref(
+    x_nz: jax.Array,  # (B, knz) compressed activations
+    idx: jax.Array,  # (knz,) int32 kept input positions (shared across B)
+    wt: jax.Array,  # (K, N) weight, row-major in the input dim
+) -> jax.Array:
+    """y[B, N] = Σ_c x_nz[:, c] · wt[idx[c], :]  — exactly SONIC Fig. 1(b)."""
+    rows = jnp.take(wt, idx, axis=0)  # (knz, N)
+    return jnp.dot(
+        x_nz.astype(jnp.float32), rows.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x_nz.dtype)

@@ -1,0 +1,137 @@
+"""Step-function builders shared by the dry-run and the production launchers.
+
+For every (arch × shape) cell this module produces:
+  * the step callable (train_step / prefill_step / decode_step),
+  * the abstract input pytree (ShapeDtypeStructs with NamedShardings),
+so ``jax.jit(fn).lower(*abstract).compile()`` is the whole dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.sparsity import SparsityConfig
+from repro.models.registry import Arch, input_specs
+from repro.sharding.mesh import MeshPlan
+from repro.sharding.partition import sharded_abstract_params
+from repro.train.loop import TrainConfig, build_train_step
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_state import abstract_train_state
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_args: tuple  # positional abstract inputs
+    donate_argnums: tuple[int, ...]
+
+
+def _attach_state_shardings(abstract_state, plan: MeshPlan):
+    """Params / moments / masks share the FSDP×TP spec; step is replicated."""
+    import dataclasses as dc
+
+    from repro.train.train_state import TrainState
+
+    params = sharded_abstract_params(abstract_state.params, plan)
+    m = sharded_abstract_params(abstract_state.opt_state["m"], plan)
+    v = sharded_abstract_params(abstract_state.opt_state["v"], plan)
+    masks = (
+        sharded_abstract_params(abstract_state.masks, plan)
+        if abstract_state.masks is not None
+        else None
+    )
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=plan.ns())
+    return TrainState(params=params, opt_state={"m": m, "v": v}, masks=masks, step=step)
+
+
+def default_train_config(cfg: ModelConfig, paper_faithful: bool = True) -> TrainConfig:
+    """Paper-faithful: sparsity-aware training ON (C1) with MXU-tile blocks."""
+    sparsity = (
+        SparsityConfig(target_sparsity=0.75, block=(128, 128),
+                       ramp_start_step=0, ramp_end_step=10_000)
+        if paper_faithful
+        else None
+    )
+    # microbatching bounds token-proportional transients (MoE dispatch
+    # buffers, CE logits) so big models stay inside v5e HBM at 256 chips
+    n_total = _rough_param_count(cfg)
+    grad_accum = 4 if n_total > 100e9 else (2 if n_total > 10e9 else 1)
+    return TrainConfig(
+        opt=AdamWConfig(moment_dtype="bfloat16" if cfg.param_dtype == "bfloat16"
+                        else "float32"),
+        sparsity=sparsity,
+        mask_update_every=100,
+        l2_coeff=1e-6 if paper_faithful else 0.0,
+        grad_accum=grad_accum,
+        remat=True,
+    )
+
+
+def _rough_param_count(cfg: ModelConfig) -> float:
+    from repro.roofline.analytic import _param_counts
+
+    return _param_counts(cfg)[1]
+
+
+def build_step_bundle(
+    arch: Arch,
+    shape: ShapeSpec,
+    plan: MeshPlan,
+    cfg: ModelConfig | None = None,
+    train_cfg: TrainConfig | None = None,
+) -> StepBundle:
+    cfg = cfg or arch.cfg
+    specs = input_specs(arch, shape, plan, cfg)
+
+    if shape.kind == "train":
+        tc = train_cfg or default_train_config(cfg)
+        step = build_train_step(arch, plan, tc, cfg)
+        abstract_params = arch.abstract_params(cfg)
+        state = abstract_train_state(
+            abstract_params,
+            tc.opt,
+            with_masks=tc.sparsity is not None,
+        )
+        state = _attach_state_shardings(state, plan)
+        batch = {k: v for k, v in specs.items()}
+        return StepBundle("train_step", step, (state, batch), donate_argnums=(0,))
+
+    serve = plan.serve_stationary  # §Perf A1: TP-only weights for inference
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            if cfg.encoder_only:  # encoders have no decode → no cache output
+                logits, _ = arch.forward(params, plan, cfg=cfg, **batch)
+                return logits, None
+            cache = arch.init_cache(shape.global_batch, shape.seq_len, plan, cfg=cfg)
+            logits, cache = arch.forward(params, plan, cfg=cfg, cache=cache, **batch)
+            return logits[:, -1], cache
+
+        params = sharded_abstract_params(arch.abstract_params(cfg), plan, serve=serve)
+        batch = {k: v for k, v in specs.items()}
+        return StepBundle("prefill_step", prefill_step, (params, batch), ())
+
+    # decode
+    def decode_step(params, cache, batch, pos):
+        kw = dict(batch)
+        if arch.input_kind == "tokens":
+            kw = {"tokens": kw.pop("token")}
+        else:
+            kw["embeds"] = kw.pop("token")
+        logits, cache = arch.forward(
+            params, plan, cfg=cfg, cache=cache, cache_pos=pos, **kw
+        )
+        return logits[:, 0], cache
+
+    params = sharded_abstract_params(arch.abstract_params(cfg), plan, serve=serve)
+    cache = specs.pop("cache")
+    pos = specs.pop("pos")
+    batch = {k: v for k, v in specs.items()}
+    return StepBundle("decode_step", decode_step, (params, cache, batch, pos),
+                      donate_argnums=(1,))

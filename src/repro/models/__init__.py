@@ -1,0 +1,2 @@
+# Registry import is lazy (repro.models.registry) to avoid import cycles while
+# submodules are loaded individually in tests.

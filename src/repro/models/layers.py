@@ -1,0 +1,416 @@
+"""Shared model layers: norms, RoPE / M-RoPE, GQA attention (chunked-flash
+prefill/train + cached decode), FFNs.
+
+Conventions:
+  * params are nested dicts of arrays; init fns mirror apply fns.
+  * activations flow in ``cfg.compute_dtype`` (bf16); norms/softmax in fp32.
+  * attention tensors are laid out (B, S, H, Dh).
+  * every apply fn is pure and jit/scan-safe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------- init utils
+
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    p = {"kernel": _normal(key, (d_in, d_out), dtype, d_in**-0.5)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+def norm_init(cfg: ModelConfig, d: int | None = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["norm_bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "norm_bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["norm_bias"]
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+
+
+def rope_angles(cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """positions (B, S) or (B, 3, S) → angles (B, S, head_dim/2) fp32.
+
+    Standard RoPE for (B, S); M-RoPE (qwen2-vl) for (B, 3, S): the dh/2
+    frequency slots are split into ``mrope_sections`` = (t, h, w) groups, each
+    driven by its own position row.
+    """
+    half = cfg.head_dim // 2
+    inv_freq = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 2:  # (B, S)
+        return positions[..., None].astype(jnp.float32) * inv_freq
+    # M-RoPE: (B, 3, S)
+    st, sh, sw = cfg.mrope_sections
+    assert st + sh + sw == half, (cfg.mrope_sections, half)
+    section = np.concatenate([np.full(st, 0), np.full(sh, 1), np.full(sw, 2)])
+    pos_per_slot = jnp.take(positions, jnp.asarray(section), axis=1)  # (B, half, S)
+    return pos_per_slot.transpose(0, 2, 1).astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (B, S, H, Dh), angles (B, S, Dh/2) → rotated x (rotate-half conv.)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ------------------------------------------------------------- attention
+
+
+def kv_repeat_factor(cfg: ModelConfig, tp: int) -> int:
+    """Replication of KV heads so the head axis shards over ``tp`` devices
+    (MaxText-style kv replication).  1 when no replication is needed."""
+    kh = cfg.n_kv_heads
+    r = 1
+    while (kh * r) % tp and (kh * r) < cfg.n_heads:
+        r += 1
+    return r if (kh * r) % tp == 0 or (kh * r) == cfg.n_heads else 1
+
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": dense_init(ks[0], d, h * dh, dt, cfg.use_bias),
+        "wk": dense_init(ks[1], d, kh * dh, dt, cfg.use_bias),
+        "wv": dense_init(ks[2], d, kh * dh, dt, cfg.use_bias),
+        "wo": dense_init(ks[3], h * dh, d, dt, cfg.use_bias),
+    }
+
+
+def _gqa_scores(q, k, scale):
+    """q (B,Sq,KH,G,Dh), k (B,Skv,KH,Dh) → scores (B,KH,G,Sq,Skv) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Skv, KH, Dh)
+    v: jax.Array,  # (B, Skv, KH, Dh)
+    q_positions: jax.Array,  # (B, Sq) int32
+    kv_positions: jax.Array,  # (B, Skv) int32
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Memory-efficient (online-softmax) attention in pure jnp.
+
+    Scans over KV chunks per Q chunk so the materialized score block is
+    (B, KH, G, q_chunk, kv_chunk) — the jnp analogue of flash attention, which
+    both bounds VMEM/HBM temp and keeps the dry-run memory analysis honest.
+    Masking is position-based: a kv position participates iff
+    kv_pos <= q_pos (causal) and kv_pos >= 0 (padding convention: pos < 0).
+    """
+    b, sq, h, dh = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    scale = dh**-0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, q_chunk, skv, kv_chunk)
+
+    qc = q.reshape(b, nq, q_chunk, kh, g, dh)
+    kc = k.reshape(b, nkv, kv_chunk, kh, dh)
+    vc = v.reshape(b, nkv, kv_chunk, kh, dh)
+    qp = q_positions.reshape(b, nq, q_chunk)
+    kp = kv_positions.reshape(b, nkv, kv_chunk)
+
+    def per_q_chunk(args):
+        qi, qpi = args  # (B, qc, KH, G, Dh), (B, qc)
+
+        # flash-backward memory discipline: recompute the (qc × kvc) score /
+        # probability block during the backward pass instead of saving it —
+        # without this, scan saves every p block and training temp memory
+        # blows up ~n_blocks× (measured 10.8 GB/dev → see EXPERIMENTS §Perf).
+        @functools.partial(
+            jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        def kv_step(carry, kv):
+            acc, m, l = carry
+            ki, vi, kpi = kv  # (B, kvc, KH, Dh), ..., (B, kvc)
+            s = _gqa_scores(qi, ki, scale)  # (B,KH,G,qc,kvc) fp32
+            mask = kpi[:, None, None, None, :] >= 0
+            if causal:
+                mask &= qpi[:, None, None, :, None] >= kpi[:, None, None, None, :]
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vi.dtype), vi)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kh, g, q_chunk, dh), v.dtype)
+        m0 = jnp.full((b, kh, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step,
+            (acc0, m0, l0),
+            (
+                jnp.moveaxis(kc, 1, 0),
+                jnp.moveaxis(vc, 1, 0),
+                jnp.moveaxis(kp, 1, 0),
+            ),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return out  # (B, KH, G, qc, Dh)
+
+    outs = jax.lax.map(
+        per_q_chunk, (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qp, 1, 0))
+    )  # (nq, B, KH, G, qc, Dh)
+    out = jnp.moveaxis(outs, 0, 1)  # (B, nq, KH, G, qc, Dh)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, sq, h, dh)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, Dh)
+    k_cache: jax.Array,  # (B, S_max, KH, Dh)
+    v_cache: jax.Array,  # (B, S_max, KH, Dh)
+    pos: jax.Array,  # (B,) current position (index of the new token)
+) -> jax.Array:
+    """Single-token attention over the cache (positions > pos are masked)."""
+    b, _, h, dh = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    qg = q.reshape(b, 1, kh, g, dh)
+    s = _gqa_scores(qg, k_cache, dh**-0.5)  # (B,KH,G,1,S_max) fp32
+    idx = jnp.arange(k_cache.shape[1])
+    mask = idx[None, :] <= pos[:, None]  # (B, S_max)
+    s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, dh)
+
+
+def _dus_batch(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Per-batch dynamic_update_slice at (pos, 0, ...)."""
+
+    def upd(c, n, p):
+        idx = (p,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), idx)
+
+    return jax.vmap(upd)(cache, new, pos)
+
+
+def update_kv_cache(
+    k_cache: jax.Array,  # (B, S_max, KH, Dh)
+    v_cache: jax.Array,
+    k_new: jax.Array,  # (B, S_new, KH, Dh)
+    v_new: jax.Array,
+    pos: jax.Array,  # (B,) write offsets
+) -> tuple[jax.Array, jax.Array]:
+    return _dus_batch(k_cache, k_new, pos), _dus_batch(v_cache, v_new, pos)
+
+
+# -------- int8 KV cache (SONIC C2 applied to the cache — §Perf A2/C) --------
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(…, Dh) bf16 → (int8 values, (…,) fp32 per-position-per-head scale).
+
+    The same insight as weight clustering (C2): bound the entropy the
+    datapath carries per element and move fewer bits.  Per-position scales
+    keep it exact to ~0.4% without any rescaling of old entries."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S) or (B, 3, S) for mrope
+    *,
+    plan=None,  # MeshPlan | None
+    cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_scales: tuple[jax.Array, jax.Array] | None = None,  # int8 cache mode
+    cache_pos: jax.Array | None = None,  # (B,)
+    causal: bool = True,
+) -> tuple[jax.Array, tuple | None]:
+    """Full attention block (no norm/residual).  Returns (out, new_cache).
+
+    Modes:
+      * cache is None                    → train/encoder forward (no cache out).
+      * cache given, S == prompt length  → prefill (writes cache at pos 0..S).
+      * cache given, S == 1              → decode step at ``cache_pos``.
+
+    Sharding (when ``plan`` has a mesh): q/k/v are constrained to head-sharded
+    (or head_dim-sharded) layout over the TP axis; KV heads are replicated
+    ``plan.kv_repeat``× first so the head axis divides TP (DESIGN.md §5).
+    """
+    b, s, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kv_repeat = plan.kv_repeat if plan is not None else 1
+    q = dense_apply(p["wq"], x).reshape(b, s, h, dh)
+    k = dense_apply(p["wk"], x).reshape(b, s, kh, dh)
+    v = dense_apply(p["wv"], x).reshape(b, s, kh, dh)
+
+    if cfg.pos_enc in ("rope", "mrope"):
+        ang = rope_angles(cfg, positions)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+
+    if kv_repeat > 1:  # TP-friendly KV head replication (DESIGN.md §5)
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+
+    if plan is not None and plan.mesh is not None:
+        if plan.attn_shard == "heads":
+            hspec = (plan.dp, None, plan.tp, None)
+            q = plan.constrain(q, *hspec)
+            k = plan.constrain(k, *hspec)
+            v = plan.constrain(v, *hspec)
+        elif plan.attn_shard == "seq" and s > 1:
+            # sequence-parallel attention: queries keep their S-shard, K/V
+            # replicate over tp (cheap — few KV heads).  Each shard computes
+            # its query slice against full K/V: no score psums, no head
+            # resharding (§Perf iteration B).
+            q = plan.constrain(q, plan.dp, plan.tp, None, None)
+            k = plan.constrain(k, plan.dp, None, None, None)
+            v = plan.constrain(v, plan.dp, None, None, None)
+        elif plan.attn_shard == "head_dim":
+            hspec = (plan.dp, None, None, plan.tp)
+            q = plan.constrain(q, *hspec)
+            k = plan.constrain(k, *hspec)
+            v = plan.constrain(v, *hspec)
+
+    new_cache = None
+    if cache is None:
+        pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
+        out = flash_attention(q, k, v, pos2d, pos2d, causal=causal)
+    else:
+        k_cache, v_cache = cache
+        quant = cache_scales is not None
+        if quant:
+            ks_cache, vs_cache = cache_scales
+            kq, ks_new = quantize_kv(k)
+            vq, vs_new = quantize_kv(v)
+        write_pos = cache_pos if s == 1 else jnp.zeros((b,), jnp.int32)
+        if quant:
+            k_cache = _dus_batch(k_cache, kq, write_pos)
+            v_cache = _dus_batch(v_cache, vq, write_pos)
+            ks_cache = _dus_batch(ks_cache, ks_new, write_pos)
+            vs_cache = _dus_batch(vs_cache, vs_new, write_pos)
+        else:
+            k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v, write_pos)
+        if plan is not None and plan.mesh is not None:
+            cspec = plan.cache_spec()
+            k_cache = plan.constrain(k_cache, *cspec)
+            v_cache = plan.constrain(v_cache, *cspec)
+            if quant:
+                ks_cache = plan.constrain(ks_cache, *cspec[:3])
+                vs_cache = plan.constrain(vs_cache, *cspec[:3])
+        if s == 1:  # decode: attend over the (dequantized) cache
+            assert cache_pos is not None
+            if quant:
+                k_att = dequantize_kv(k_cache, ks_cache, q.dtype)
+                v_att = dequantize_kv(v_cache, vs_cache, q.dtype)
+            else:
+                k_att, v_att = k_cache, v_cache
+            out = decode_attention(q, k_att, v_att, cache_pos)
+        else:  # prefill: attend over the fresh (exact) k/v
+            pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
+            out = flash_attention(q, k, v, pos2d, pos2d, causal=causal)
+        new_cache = (
+            (k_cache, v_cache, ks_cache, vs_cache) if quant else (k_cache, v_cache)
+        )
+
+    out = dense_apply(p["wo"], out.reshape(b, s, h * dh))
+    return out, new_cache
+
+
+# ----------------------------------------------------------------- FFN
+
+
+def ffn_init(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.ffn == "swiglu":
+        return {
+            "wi": dense_init(ks[0], cfg.d_model, d_ff, dt, cfg.use_bias),
+            "wg": dense_init(ks[1], cfg.d_model, d_ff, dt, cfg.use_bias),
+            "wo": dense_init(ks[2], d_ff, cfg.d_model, dt, cfg.use_bias),
+        }
+    return {
+        "wi": dense_init(ks[0], cfg.d_model, d_ff, dt, cfg.use_bias),
+        "wo": dense_init(ks[2], d_ff, cfg.d_model, dt, cfg.use_bias),
+    }
+
+
+def ffn_apply(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "wg" in p:  # swiglu
+        h = jax.nn.silu(dense_apply(p["wi"], x)) * dense_apply(p["wg"], x)
+    else:
+        h = jax.nn.gelu(dense_apply(p["wi"], x))
+    return dense_apply(p["wo"], h)
+
+
+# ------------------------------------------------------------- embeddings
+
+
+def embed_init(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"embedding": _normal(key, (cfg.vocab_size, cfg.d_model), dt, 1.0)}
+
+
+def embed_apply(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0).astype(dtype)
+
+
+def lm_head_init(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"kernel": _normal(key, (cfg.d_model, cfg.vocab_size), dt, cfg.d_model**-0.5)}
+
+
+def lm_head_apply(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["kernel"].astype(x.dtype)

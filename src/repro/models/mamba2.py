@@ -1,0 +1,199 @@
+"""Mamba2 / SSD block (zamba2 backbone).  [arXiv:2405.21060]
+
+Chunked SSD formulation: within a chunk the recurrence is evaluated as two
+matmuls (MXU-friendly); across chunks a small scan carries the (H, N, P)
+state.  Decode is the exact one-step recurrence.
+
+Per head h with decay a_t = exp(dt_t · A_h) (A_h < 0):
+    state_t = a_t · state_{t-1} + dt_t · B_t ⊗ x_t        (N × P outer product)
+    y_t     = C_t · state_t + D_h · x_t
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _normal, norm_apply
+
+
+def mamba2_dims(cfg: ModelConfig) -> dict[str, int]:
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = d_in + 2 * g * n
+    proj_dim = 2 * d_in + 2 * g * n + h  # z, x, B, C, dt
+    return dict(d_in=d_in, g=g, n=n, h=h, p=cfg.ssm_head_dim,
+                conv_dim=conv_dim, proj_dim=proj_dim)
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    dm = mamba2_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": {"kernel": _normal(ks[0], (cfg.d_model, dm["proj_dim"]), dt, cfg.d_model**-0.5)},
+        "conv_w": _normal(ks[1], (cfg.ssm_conv_width, dm["conv_dim"]), dt, 0.3),
+        "conv_b": jnp.zeros((dm["conv_dim"],), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, dm["h"], dtype=jnp.float32)),
+        "D": jnp.ones((dm["h"],), jnp.float32),
+        "dt_bias": jnp.zeros((dm["h"],), jnp.float32),
+        "out_norm": {"scale": jnp.ones((dm["d_in"],), jnp.float32)},
+        "out_proj": {"kernel": _normal(ks[2], (dm["d_in"], cfg.d_model), dt, dm["d_in"]**-0.5)},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time.  x (B, S, C), w (W, C).
+
+    Returns (out (B,S,C), new_state (B, W-1, C)) — state carries the last W-1
+    inputs for decode continuity.
+    """
+    bsz, s, c = x.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+W-1, C)
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is tiny (4): unrolled taps
+        out = out + xp[:, i : i + s, :] * w[i].astype(x.dtype)
+    out = jax.nn.silu(out + b.astype(x.dtype))
+    new_state = xp[:, s:, :] if width > 1 else state
+    return out, new_state
+
+
+def _ssd_chunked(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32, post-softplus
+    A: jax.Array,   # (H,) fp32, negative
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    h0: jax.Array | None,  # (B, H, N, P) carried state or None
+    chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:  # dt=0 padding is state-neutral: decay=1, update=0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, g, n)
+    Cc = Cm.reshape(b, nc, chunk, g, n)
+
+    la = dtc * A  # (B,nc,L,H) negative log-decays
+    cum = jnp.cumsum(la, axis=2)  # inclusive within chunk
+
+    # intra-chunk: y_i += Σ_{j<=i} (C_i·B_j) exp(cum_i - cum_j) dt_j x_j
+    scores = jnp.einsum("bclgn,bcmgn->bcglm", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    scores = jnp.repeat(scores, rep, axis=2)  # (B,nc,H,L,L)
+    # (B,nc,H,L_i,L_j): cum_i - cum_j, masked to j <= i
+    ci = cum.transpose(0, 1, 3, 2)  # (B,nc,H,L)
+    dmat = ci[..., :, None] - ci[..., None, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the EXPONENT (not the exp output): dmat > 0 above the diagonal
+    # would overflow exp and poison the backward pass through where()
+    m = jnp.exp(jnp.where(mask, dmat, -jnp.inf)) * scores
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # (B,nc,L,H,P)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", m, xdt)
+
+    # chunk summaries: S_c = Σ_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+    wj = jnp.exp(ci[..., -1:] - ci)  # (B,nc,H,L)
+    Brep = jnp.repeat(Bc, rep, axis=3)  # (B,nc,L,H,N)
+    s_chunk = jnp.einsum("bchl,bclhn,bclhp->bchnp", wj, Brep.astype(jnp.float32), xdt)
+    chunk_decay = jnp.exp(ci[..., -1])  # (B,nc,H) total decay of each chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def carry_fn(hprev, inp):
+        s_c, cd = inp  # (B,H,N,P), (B,H)
+        hnew = hprev * cd[..., None, None] + s_c
+        return hnew, hprev
+
+    hseq_in = (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_prevs = jax.lax.scan(carry_fn, h0.astype(jnp.float32), hseq_in)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # inter-chunk: y_i += exp(cum_i) C_i · h_prev
+    Crep = jnp.repeat(Cc, rep, axis=3)  # (B,nc,L,H,N)
+    y_inter = jnp.einsum(
+        "bclhn,bchnp,bchl->bclhp",
+        Crep.astype(jnp.float32),
+        h_prevs,
+        jnp.exp(ci),
+    )
+    y = y_intra + y_inter
+    y = y.reshape(b, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def mamba2_apply(
+    p: Params,
+    cfg: ModelConfig,
+    xin: jax.Array,  # (B, S, d_model)
+    state: dict[str, jax.Array] | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    """Full Mamba2 block (no outer norm/residual).  Returns (out, new_state).
+
+    state = {"conv": (B, W-1, conv_dim), "ssm": (B, H, N, P)}; pass None for
+    training/prefill-from-scratch (final state still returned when state
+    given — decode path keeps both updated).
+    """
+    dm = mamba2_dims(cfg)
+    b, s, _ = xin.shape
+    proj = xin @ p["in_proj"]["kernel"].astype(xin.dtype)
+    z, xbc, dt_raw = jnp.split(
+        proj, [dm["d_in"], dm["d_in"] + dm["conv_dim"]], axis=-1
+    )
+    conv_state = state["conv"] if state else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x, Bm, Cm = jnp.split(xbc, [dm["d_in"], dm["d_in"] + dm["g"] * dm["n"]], axis=-1)
+    x = x.reshape(b, s, dm["h"], dm["p"])
+    Bm = Bm.reshape(b, s, dm["g"], dm["n"])
+    Cm = Cm.reshape(b, s, dm["g"], dm["n"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    h0 = state["ssm"] if state else None
+    if s == 1 and state is not None:  # exact single-step decode
+        a = jnp.exp(dt[:, 0] * A)  # (B,H)
+        Brep = jnp.repeat(Bm[:, 0], dm["h"] // dm["g"], axis=1)  # (B,H,N)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0], Brep.astype(jnp.float32),
+                         x[:, 0].astype(jnp.float32))
+        hnew = h0 * a[..., None, None] + upd
+        Crep = jnp.repeat(Cm[:, 0], dm["h"] // dm["g"], axis=1)
+        y = jnp.einsum("bhn,bhnp->bhp", Crep.astype(jnp.float32), hnew)
+        y = y[:, None].astype(x.dtype)  # (B,1,H,P)
+        h_final = hnew
+    else:
+        y, h_final = _ssd_chunked(x, dt, A, Bm, Cm, h0, cfg.ssm_chunk)
+
+    y = y + x * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(b, s, dm["d_in"])
+    y = norm_apply(p["out_norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]["kernel"].astype(y.dtype)
+    new_state = None
+    if state is not None or True:
+        new_state = {"conv": new_conv, "ssm": h_final}
+    return out, new_state
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    dm = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, dm["conv_dim"]), dtype),
+        "ssm": jnp.zeros((batch, dm["h"], dm["n"], dm["p"]), jnp.float32),
+    }

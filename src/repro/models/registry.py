@@ -1,0 +1,206 @@
+"""Arch registry: maps every assigned ``--arch`` id to its config, model
+module, abstract input specs, and shape-support rules (DESIGN.md §4).
+
+``input_specs(arch, shape, plan)`` returns ShapeDtypeStructs (with
+NamedShardings when the plan has a mesh) for every model input of that
+(arch × shape) cell — the dry-run lowers against these, allocating nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, get_config, reduced_config
+from repro.sharding.mesh import MeshPlan
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    arch_id: str
+    cfg: ModelConfig
+    module: Any  # repro.models.{transformer|hybrid|rwkv_model}
+    period: int  # layers per homogeneous period (cost-probe granularity)
+    input_kind: str  # "tokens" | "embeds" | "embeds+mrope"
+
+    # -- delegation ---------------------------------------------------------
+    def init_params(self, key):
+        return self.module.init_params(self.cfg, key)
+
+    def abstract_params(self, cfg: ModelConfig | None = None):
+        cfg = cfg or self.cfg
+        return jax.eval_shape(lambda: self.module.init_params(cfg, jax.random.PRNGKey(0)))
+
+    def forward(self, params, plan: MeshPlan, cfg: ModelConfig | None = None, **kw):
+        return self.module.forward(params, cfg or self.cfg, plan, **kw)
+
+    def init_cache(self, batch: int, max_len: int, plan: MeshPlan,
+                   cfg: ModelConfig | None = None):
+        return self.module.init_cache(cfg or self.cfg, batch, max_len, plan)
+
+    def abstract_cache(self, batch: int, max_len: int, plan: MeshPlan,
+                       cfg: ModelConfig | None = None):
+        return jax.eval_shape(
+            lambda: self.module.init_cache(cfg or self.cfg, batch, max_len, plan)
+        )
+
+    # -- shape support (DESIGN.md §4 skip matrix) ---------------------------
+    def supports(self, shape: ShapeSpec) -> tuple[bool, str]:
+        if shape.kind == "decode" and self.cfg.encoder_only:
+            return False, "encoder-only arch has no decode step"
+        if shape.name == "long_500k" and not self.cfg.is_subquadratic:
+            return False, (
+                "pure full-attention arch: 500k-token decode requires "
+                "sub-quadratic attention (skip noted in DESIGN.md §4)"
+            )
+        return True, ""
+
+
+def _module_for(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        from repro.models import hybrid
+
+        return hybrid
+    if cfg.rwkv_head_size:
+        from repro.models import rwkv_model
+
+        return rwkv_model
+    from repro.models import transformer
+
+    return transformer
+
+
+_INPUT_KIND = {
+    "hubert-xlarge": "embeds",
+    "qwen2-vl-2b": "embeds+mrope",
+}
+
+
+def get_arch(arch_id: str, reduced: bool = False) -> Arch:
+    cfg = reduced_config(arch_id) if reduced else get_config(arch_id)
+    period = cfg.shared_attention_every or 1
+    return Arch(
+        arch_id=arch_id,
+        cfg=cfg,
+        module=_module_for(cfg),
+        period=period,
+        input_kind=_INPUT_KIND.get(arch_id, "tokens"),
+    )
+
+
+def input_specs(
+    arch: Arch,
+    shape: ShapeSpec,
+    plan: MeshPlan,
+    cfg: ModelConfig | None = None,
+) -> dict[str, Any]:
+    """Abstract (ShapeDtypeStruct) model inputs for one (arch × shape) cell.
+
+    train   → tokens/embeds (+positions) + labels
+    prefill → tokens/embeds (+positions)
+    decode  → token (B,1) + cache (length = shape.seq_len) + pos (B,)
+    """
+    cfg = cfg or arch.cfg
+    b, s = shape.global_batch, shape.seq_len
+    bf16 = jnp.bfloat16
+
+    def sds(shp, dtype, *spec):
+        sh = plan.ns(*spec) if plan.mesh is not None else None
+        return SDS(shp, dtype, sharding=sh)
+
+    def token_inputs(seq: int) -> dict[str, Any]:
+        if arch.input_kind == "tokens":
+            return {"tokens": sds((b, seq), jnp.int32, plan.dp, None)}
+        out = {"embeds": sds((b, seq, cfg.d_model), bf16, plan.dp, None, None)}
+        if arch.input_kind == "embeds+mrope":
+            out["positions"] = sds((b, 3, seq), jnp.int32, plan.dp, None, None)
+        return out
+
+    if shape.kind == "train":
+        specs = token_inputs(s)
+        specs["labels"] = sds((b, s), jnp.int32, plan.dp, None)
+        return specs
+
+    if shape.kind == "prefill":
+        return token_inputs(s)
+
+    # decode: one new token, cache of length s
+    specs: dict[str, Any] = {}
+    if arch.input_kind == "tokens":
+        specs["token"] = sds((b, 1), jnp.int32, plan.dp, None)
+    else:
+        specs["token"] = sds((b, 1, cfg.d_model), bf16, plan.dp, None, None)
+        if arch.input_kind == "embeds+mrope":
+            specs["positions"] = sds((b, 3, 1), jnp.int32, plan.dp, None, None)
+    specs["pos"] = sds((b,), jnp.int32, plan.dp)
+    cache_abs = arch.abstract_cache(b, s, plan, cfg)
+    specs["cache"] = cache_shardings(arch, cache_abs, plan, cfg)
+    return specs
+
+
+def cache_shardings(arch: Arch, cache_abs, plan: MeshPlan, cfg: ModelConfig):
+    """Attach NamedShardings to an abstract cache pytree."""
+    if plan.mesh is None:
+        return cache_abs
+    cspec = plan.cache_spec()
+
+    def shard_leaf(path: str, leaf: SDS) -> SDS:
+        nd = len(leaf.shape)
+        if "scale" in path:  # int8-cache scales (L, B, S, KH)
+            spec = (None, *cspec[:3])
+        elif "attn" in path or path in ("k", "v"):
+            spec = (None, *cspec)  # (L/n_inv, B, S, KH, Dh)
+        elif "ssm" in path:  # (L, B, H, N, P): heads over tp when divisible
+            h = leaf.shape[2]
+            tp_ok = h % plan.tp_size == 0
+            spec = (None, plan.dp, plan.tp if tp_ok else None, None, None)
+        elif "conv" in path:  # (L, B, W-1, conv_dim)
+            spec = (None, plan.dp, None, plan.tp)
+        elif "wkv" in path:  # (L, B, H, n, n): shard key-dim (n % tp varies)
+            spec = (None, plan.dp, None, None, None)
+        elif "shift" in path:  # (L, B, d)
+            spec = (None, plan.dp, None)
+        else:
+            spec = tuple([None] * nd)
+        spec = tuple(spec[:nd]) + (None,) * (nd - len(spec))
+        # divisibility guard: drop axis entries that don't divide
+        fixed = []
+        for dim, entry in zip(leaf.shape, spec):
+            if entry is None:
+                fixed.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= plan.mesh.shape[a]
+            fixed.append(entry if dim % size == 0 else None)
+        return SDS(leaf.shape, leaf.dtype, sharding=plan.ns(*fixed))
+
+    from repro.utils.tree import tree_map_with_path_names
+
+    return tree_map_with_path_names(shard_leaf, cache_abs)
+
+
+def live_cells(arch_ids=None, shapes=None) -> list[tuple[str, str]]:
+    """All (arch_id, shape_name) pairs that are not skipped."""
+    from repro.configs.base import ALL_ARCH_IDS, SHAPES
+
+    out = []
+    for aid in arch_ids or ALL_ARCH_IDS:
+        arch = get_arch(aid)
+        for sname in shapes or SHAPES:
+            ok, _ = arch.supports(SHAPES[sname])
+            if ok:
+                out.append((aid, sname))
+    return out
+
+
+def skip_reason(arch_id: str, shape_name: str) -> str:
+    from repro.configs.base import SHAPES
+
+    ok, reason = get_arch(arch_id).supports(SHAPES[shape_name])
+    return "" if ok else reason

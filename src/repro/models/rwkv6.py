@@ -1,0 +1,146 @@
+"""RWKV6 "Finch" block — data-dependent per-channel decay, attention-free.
+[arXiv:2404.05892]
+
+Time-mix (per head, head size n):
+    w_t = exp(-exp(w0 + tanh(x_w @ A1) @ A2))        data-dependent decay (LoRA)
+    S_t[i,j] = w_t[i]·S_{t-1}[i,j] + k_t[i]·v_t[j]   state (n × n) per head
+    y_t[j]   = Σ_i r_t[i]·(S_{t-1}[i,j] + u[i]·k_t[i]·v_t[j])
+Channel-mix: squared-ReLU 2-layer MLP gated by sigmoid(r).
+
+The WKV recurrence runs as a lax.scan over time (state is O(1) in sequence
+length — this is why rwkv6 runs the long_500k cell).  Token-shift states make
+prefill→decode bitwise-continuous.  Simplifications vs the released model
+(noted in DESIGN.md): the five token-shift lerps use static learned μ vectors
+(the decay keeps its full data-dependent LoRA); no per-block init-state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _normal, norm_apply
+
+
+def rwkv6_time_mix_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    mu = lambda k: jax.random.uniform(k, (5, d), jnp.float32)  # r,k,v,w,g lerps
+    return {
+        "mu": mu(ks[0]),
+        "wr": {"kernel": _normal(ks[1], (d, d), dt, d**-0.5)},
+        "wk": {"kernel": _normal(ks[2], (d, d), dt, d**-0.5)},
+        "wv": {"kernel": _normal(ks[3], (d, d), dt, d**-0.5)},
+        "wg": {"kernel": _normal(ks[4], (d, d), dt, d**-0.5)},
+        "wo": {"kernel": _normal(ks[5], (d, d), dt, d**-0.5)},
+        "w0": jnp.full((d,), -3.0, jnp.float32),  # ≈ slow decay at init
+        "decay_lora_a": _normal(ks[6], (d, cfg.rwkv_lora_decay), jnp.float32, d**-0.5),
+        "decay_lora_b": _normal(ks[7], (cfg.rwkv_lora_decay, d), jnp.float32,
+                                cfg.rwkv_lora_decay**-0.5),
+        "u": _normal(ks[8], (d,), jnp.float32, 0.5),
+        "ln_x": {"scale": jnp.ones((d,), jnp.float32),
+                 "norm_bias": jnp.zeros((d,), jnp.float32)},
+    }
+
+
+def rwkv6_channel_mix_init(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, d), jnp.float32),  # k, r lerps
+        "wk": {"kernel": _normal(ks[1], (d, f), dt, d**-0.5)},
+        "wv": {"kernel": _normal(ks[2], (f, d), dt, f**-0.5)},
+        "wr": {"kernel": _normal(ks[3], (d, d), dt, d**-0.5)},
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x (B,S,d) → x shifted right by one; position 0 gets ``prev`` (B,d)."""
+    b, s, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((b, d), x.dtype)
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _wkv_scan(
+    r: jax.Array,  # (B,S,H,n)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # (B,S,H,n) decays in (0,1)
+    u: jax.Array,  # (H,n)
+    s0: jax.Array,  # (B,H,n,n)
+) -> tuple[jax.Array, jax.Array]:
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,n)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,n,n)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin  # (B,S,H,n), (B,H,n,n)
+
+
+def rwkv6_time_mix_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B,S,d)
+    state: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_size
+    prev = state["shift_t"] if state else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    lerp = lambda i: x + (xs - x) * mu[i]
+    xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
+
+    r = (xr @ p["wr"]["kernel"].astype(x.dtype)).reshape(b, s, h, n)
+    k = (xk @ p["wk"]["kernel"].astype(x.dtype)).reshape(b, s, h, n)
+    v = (xv @ p["wv"]["kernel"].astype(x.dtype)).reshape(b, s, h, n)
+    g = jax.nn.silu(xg @ p["wg"]["kernel"].astype(x.dtype))
+
+    # data-dependent decay (the Finch contribution)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w0"] + dd))  # (B,S,d) in (0,1)
+    w = w.reshape(b, s, h, n)
+
+    u = p["u"].reshape(h, n)
+    s0 = state["wkv"] if state else jnp.zeros((b, h, n, n), jnp.float32)
+    y, s_fin = _wkv_scan(r, k, v, w, u, s0)
+
+    y = y.reshape(b, s, d)
+    y = norm_apply(p["ln_x"], y).astype(x.dtype) * g
+    out = y @ p["wo"]["kernel"].astype(x.dtype)
+    new_state = {"shift_t": x[:, -1, :], "wkv": s_fin}
+    return out, new_state
+
+
+def rwkv6_channel_mix_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    prev = state["shift_c"] if state else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]["kernel"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["wr"]["kernel"].astype(x.dtype)) * (
+        kk @ p["wv"]["kernel"].astype(x.dtype)
+    )
+    return out, {"shift_c": x[:, -1, :]}
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    h, n = cfg.rwkv_heads, cfg.rwkv_head_size
+    return {
+        "shift_t": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, h, n, n), jnp.float32),
+        "shift_c": jnp.zeros((batch, cfg.d_model), dtype),
+    }

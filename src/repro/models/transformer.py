@@ -1,0 +1,242 @@
+"""Transformer LM assembly — dense / MoE / encoder / VLM families.
+
+Structure: embed → lax.scan over stacked layer params (+ optional remat) →
+final norm → LM head.  One code path serves train, prefill, and decode; the
+mode is picked by (cache, cache_pos) exactly as in ``attention_apply``.
+
+Layer params are stacked on a leading (n_layers,) axis so the whole trunk is
+one scan — compact HLO, fast 512-device compiles, FSDP-friendly (per-layer
+all-gathers happen inside the loop → XLA can prefetch layer i+1's params
+during layer i's compute).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.sharding.mesh import MeshPlan
+
+Params = dict[str, Any]
+
+
+# ----------------------------------------------------------------- init
+
+
+def _layer_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "ln1": L.norm_init(cfg),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.norm_init(cfg),
+    }
+    if cfg.n_experts:
+        p["moe"] = M.moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = L.ffn_init(ks[2], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    kemb, klyr, khead = jax.random.split(key, 3)
+    layer_keys = jax.random.split(klyr, cfg.n_layers)
+    p: Params = {
+        "embed": L.embed_init(kemb, cfg),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "final_norm": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.lm_head_init(khead, cfg)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ----------------------------------------------------------------- blocks
+
+
+def layer_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,
+    plan: MeshPlan,
+    cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_pos: jax.Array | None = None,
+) -> tuple[jax.Array, tuple | None]:
+    b, s, _ = x.shape
+    seq = plan.tp if s > 1 else None  # SP only when the seq dim exists
+
+    cache_kv = cache[:2] if cache is not None else None
+    cache_scales = cache[2:] if (cache is not None and len(cache) == 4) else None
+    h, new_cache = L.attention_apply(
+        p["attn"],
+        cfg,
+        L.norm_apply(p["ln1"], x),
+        positions,
+        plan=plan,
+        cache=cache_kv,
+        cache_scales=cache_scales,
+        cache_pos=cache_pos,
+        causal=not cfg.encoder_only,
+    )
+    # constrain the sublayer OUTPUT (a TP partial sum) before the residual
+    # add: GSPMD then lowers psum+shard to reduce-scatter instead of
+    # all-reducing the full (B,S,D) residual (§Perf iteration B: the AR was
+    # 11 GB/step on qwen2-vl train — 2× the RS wire bytes)
+    h = plan.constrain(h, plan.dp, seq, None)
+    x = x + h
+
+    hin = L.norm_apply(p["ln2"], x)
+    if cfg.n_experts:
+        h2 = M.moe_apply(p["moe"], cfg, hin, plan)
+    else:
+        h2 = L.ffn_apply(p["ffn"], cfg, hin)
+    h2 = plan.constrain(h2, plan.dp, seq, None)
+    x = plan.constrain(x + h2, plan.dp, seq, None)
+    return x, new_cache
+
+
+def trunk_apply(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D) — post-embedding
+    positions: jax.Array,
+    plan: MeshPlan,
+    cache: dict | None = None,  # {"k": (L,B,S_max,KH,Dh), "v": ...}
+    cache_pos: jax.Array | None = None,
+    remat: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """Scan the stacked layers.  Returns (hidden, new_cache)."""
+
+    if cache is None:  # train / encoder forward
+
+        def body(x, lp):
+            x, _ = layer_apply(lp, cfg, x, positions, plan, None, None)
+            return x, None
+
+        if remat:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat_policy == "dots"
+                else jax.checkpoint_policies.nothing_saveable
+            )
+            body = jax.checkpoint(body, policy=policy)
+        if cfg.unroll_layers:
+            for i in range(cfg.n_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                x, _ = body(x, lp)
+            return x, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, None
+
+    quant = "k_scale" in cache
+
+    def body_cached(x, inp):
+        if quant:
+            lp, kc, vc, ks, vs = inp
+            x, new_c = layer_apply(lp, cfg, x, positions, plan,
+                                   (kc, vc, ks, vs), cache_pos)
+        else:
+            lp, kc, vc = inp
+            x, new_c = layer_apply(lp, cfg, x, positions, plan, (kc, vc), cache_pos)
+        return x, new_c
+
+    if quant:
+        x, (nk, nv, nks, nvs) = jax.lax.scan(
+            body_cached, x,
+            (params["layers"], cache["k"], cache["v"],
+             cache["k_scale"], cache["v_scale"]),
+        )
+        return x, {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+    x, (new_k, new_v) = jax.lax.scan(
+        body_cached, x, (params["layers"], cache["k"], cache["v"])
+    )
+    return x, {"k": new_k, "v": new_v}
+
+
+# ----------------------------------------------------------------- full model
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    plan: MeshPlan,
+    *,
+    tokens: jax.Array | None = None,  # (B, S) int32
+    embeds: jax.Array | None = None,  # (B, S, D) — stubbed modality frontends
+    positions: jax.Array | None = None,  # (B, S) / (B, 3, S); default arange
+    cache: dict | None = None,
+    cache_pos: jax.Array | None = None,
+    remat: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """→ (logits (B, S, V), new_cache)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if embeds is None:
+        assert tokens is not None
+        x = L.embed_apply(params["embed"], tokens, dtype)
+        b, s = tokens.shape
+    else:
+        x = embeds.astype(dtype)
+        b, s, _ = embeds.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cache_pos is not None:  # decode: absolute position of the new token
+            positions = cache_pos[:, None]
+
+    seq = plan.tp if s > 1 else None
+    x = plan.constrain(x, plan.dp, seq, None)
+    x, new_cache = trunk_apply(
+        params, cfg, x, positions, plan, cache, cache_pos, remat
+    )
+    x = L.norm_apply(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["embedding"].astype(x.dtype).T
+    else:
+        logits = L.lm_head_apply(params["lm_head"], x)
+    logits = plan.constrain(logits, plan.dp, None, plan.tp)
+    return logits, new_cache
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, plan: MeshPlan, dtype=jnp.bfloat16
+) -> dict:
+    kh_eff = cfg.n_kv_heads * (plan.kv_repeat if plan else 1)
+    shape = (cfg.n_layers, batch, max_len, kh_eff, cfg.head_dim)
+    if plan is not None and plan.cache_quant_int8:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def loss_fn(
+    logits: jax.Array,  # (B, S, V)
+    labels: jax.Array,  # (B, S) int32; -1 = ignore
+) -> jax.Array:
+    """Mean token cross-entropy, fp32, vocab-sharding-safe.
+
+    The label logit is extracted with a compare-and-sum over the vocab axis
+    (not take_along_axis): an elementwise (label == iota_V) mask reduces over
+    the sharded axis with a plain psum, so GSPMD never all-gathers the
+    (B, S, V) logits — the gather lowering would.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    v = logits.shape[-1]
+    onehot = labels[..., None] == jax.lax.iota(jnp.int32, v)  # (B,S,V) fused
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    valid = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1.0)

@@ -1,0 +1,4 @@
+from repro.photonic.devices import DEVICES, DeviceParams
+from repro.photonic.accelerator import SonicAccelerator, SonicHWConfig
+from repro.photonic.mapper import LayerWork, cnn_workload, lm_workload
+from repro.photonic.baselines import BASELINES, evaluate_all

@@ -1,0 +1,3 @@
+from repro.roofline.hw import TPU_V5E
+from repro.roofline.analysis import analyze_compiled, roofline_terms
+from repro.roofline.analytic import analytic_cost

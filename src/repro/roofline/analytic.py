@@ -1,0 +1,168 @@
+"""Closed-form FLOP / HBM-byte model per (arch × shape).
+
+Two FLOP numbers per cell:
+  * ``model_flops``  — useful work: 6·N·D (train) / 2·N·D (inference) with
+    N = active non-embedding params and D = tokens, plus *causal-half*
+    attention;
+  * ``hlo_flops_est`` — what the compiled program actually executes: full
+    (unmasked) S² attention in the jnp flash implementation, the remat
+    re-forward during training, MoE capacity-factor padding waste.
+
+The ratio model_flops / hlo_flops_est is the §Roofline "useful fraction";
+its gap decomposition (remat / causal-waste / moe-padding) tells the §Perf
+loop what to attack.
+
+HBM bytes are estimated per device from weight traffic + activation traffic +
+KV-cache traffic; coefficients are stated inline.  Collective bytes are NOT
+estimated here — they come from the compiled HLO (analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass
+class CellCost:
+    model_flops: float  # global useful FLOPs per step
+    hlo_flops_est: float  # global executed FLOPs per step
+    hbm_bytes: float  # global HBM traffic per step (bytes)
+    n_active: float  # active non-embedding params
+    n_total: float
+    breakdown: dict
+
+
+def _param_counts(cfg: ModelConfig) -> tuple[float, float]:
+    """(active_nonembed, total) parameter counts."""
+    d, f, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    embed = V * d * (1 if cfg.tie_embeddings else 2)  # embed + lm_head
+    if cfg.rwkv_head_size:
+        tm = 5 * d * d + 2 * d * cfg.rwkv_lora_decay + 2 * d
+        cm = d * f + f * d + d * d
+        per_layer = tm + cm
+        total = embed + L * per_layer
+        return L * per_layer + V * d, total
+    attn = d * h * dh + 2 * d * kh * dh + h * dh * d
+    n_ffn_mats = 3 if cfg.ffn == "swiglu" else 2
+    ffn_dense = n_ffn_mats * d * f
+    if cfg.family == "hybrid":
+        dm_in = 2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+        mamba = d * dm_in + cfg.d_inner * d + cfg.ssm_conv_width * (
+            cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        )
+        shared = attn + ffn_dense  # ONE shared block
+        total = embed + L * mamba + shared
+        n_inv = (L + cfg.shared_attention_every - 1) // cfg.shared_attention_every
+        active = L * mamba + n_inv * shared + V * d  # shared reused n_inv times
+        return active, total
+    if cfg.n_experts:
+        experts = cfg.n_experts * n_ffn_mats * d * f
+        active_experts = cfg.experts_per_token * n_ffn_mats * d * f
+        router = d * cfg.n_experts
+        total = embed + L * (attn + experts + router)
+        active = L * (attn + active_experts + router) + V * d
+        return active, total
+    total = embed + L * (attn + ffn_dense)
+    return L * (attn + ffn_dense) + V * d, total
+
+
+def _attn_flops(cfg: ModelConfig, tokens: float, s_ctx: float, causal: bool,
+                decode: bool) -> tuple[float, float]:
+    """(useful, executed) attention score+pv FLOPs (projections excluded)."""
+    h, dh = cfg.n_heads, cfg.head_dim
+    if cfg.rwkv_head_size:  # WKV recurrence: ~6·d·n per token
+        fl = 6.0 * cfg.d_model * cfg.rwkv_head_size * tokens * cfg.n_layers
+        return fl, fl
+    if cfg.family == "hybrid":
+        # SSD per token: intra-chunk 2·Lc·(G·N + H·P) + inter 4·H·N·P
+        Lc = cfg.ssm_chunk
+        hS, nS, pS, gS = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_groups
+        per_tok = 2 * Lc * (gS * nS + hS * pS) + 4 * hS * nS * pS
+        if decode:
+            per_tok = 6 * hS * nS * pS
+        ssd = per_tok * tokens * cfg.n_layers
+        # shared attention invocations
+        n_inv = (cfg.n_layers + cfg.shared_attention_every - 1) // cfg.shared_attention_every
+        useful_ctx = s_ctx / 2 if (causal and not decode) else s_ctx
+        attn_u = 4 * h * dh * useful_ctx * tokens * n_inv
+        attn_x = 4 * h * dh * s_ctx * tokens * n_inv
+        return ssd + attn_u, ssd + attn_x
+    n_layers_attn = cfg.n_layers
+    useful_ctx = s_ctx / 2 if (causal and not decode and not cfg.encoder_only) else s_ctx
+    return (
+        4 * h * dh * useful_ctx * tokens * n_layers_attn,
+        4 * h * dh * s_ctx * tokens * n_layers_attn,
+    )
+
+
+def analytic_cost(
+    cfg: ModelConfig, shape: ShapeSpec, cache_bytes_per_elem: float = 2.0
+) -> CellCost:
+    """``cache_bytes_per_elem``: 2.0 for bf16 KV cache, 1.03 for the int8 +
+    per-position-scale cache (§Perf A2/C)."""
+    n_active, n_total = _param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    tokens = float(b * s) if kind != "decode" else float(b)
+    s_ctx = float(s)
+    bytes_per = 2.0  # bf16 weights/activations on the wire
+
+    lin_u = 2.0 * n_active * tokens  # useful linear FLOPs, fwd
+    attn_u, attn_x = _attn_flops(cfg, tokens, s_ctx, causal=True,
+                                 decode=(kind == "decode"))
+
+    moe_pad = 1.0
+    if cfg.n_experts and kind != "decode":
+        moe_pad = cfg.moe_capacity_factor  # capacity padding executes as real work
+
+    if kind == "train":
+        # bwd = 2× fwd; remat(nothing_saveable) re-runs fwd once more
+        model = 3.0 * (lin_u + attn_u)
+        hlo = (3.0 + 1.0) * (lin_u * moe_pad + attn_x)
+        weight_traffic = 3.0 * n_total * bytes_per  # fwd + remat-fwd + bwd reads
+        opt_traffic = 2.0 * n_total * (2 + 2) * 2  # m,v read+write (bf16/fp32 mix)
+        act_traffic = 12.0 * tokens * cfg.d_model * bytes_per * cfg.n_layers
+        hbm = weight_traffic + opt_traffic + act_traffic
+    elif kind == "prefill":
+        model = lin_u + attn_u
+        hlo = lin_u * moe_pad + attn_x
+        weight_traffic = n_total * bytes_per
+        act_traffic = 8.0 * tokens * cfg.d_model * bytes_per * cfg.n_layers
+        hbm = weight_traffic + act_traffic
+    else:  # decode
+        model = lin_u + attn_u
+        hlo = lin_u + attn_x
+        weight_traffic = n_active * bytes_per  # active weights read once
+        kh_eff = cfg.n_kv_heads
+        cb = cache_bytes_per_elem
+        cache_traffic = (
+            2.0 * b * s_ctx * kh_eff * cfg.head_dim * cb * cfg.n_layers
+            if not (cfg.rwkv_head_size or cfg.family == "hybrid")
+            else 0.0
+        )
+        if cfg.family == "hybrid":
+            n_inv = (cfg.n_layers + cfg.shared_attention_every - 1) // cfg.shared_attention_every
+            cache_traffic = 2.0 * b * s_ctx * cfg.n_kv_heads * cfg.head_dim * cb * n_inv
+            cache_traffic += 2.0 * b * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4 * cfg.n_layers
+        if cfg.rwkv_head_size:
+            cache_traffic = 2.0 * b * cfg.d_model * cfg.rwkv_head_size * 4 * cfg.n_layers
+        hbm = weight_traffic + cache_traffic + 4.0 * b * cfg.d_model * bytes_per * cfg.n_layers
+    return CellCost(
+        model_flops=model,
+        hlo_flops_est=hlo,
+        hbm_bytes=hbm,
+        n_active=n_active,
+        n_total=n_total,
+        breakdown={
+            "linear_useful": lin_u,
+            "attn_useful": attn_u,
+            "attn_executed": attn_x,
+            "moe_capacity_pad": moe_pad,
+            "tokens": tokens,
+        },
+    )

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, ServeConfig
+from repro.serve.sampling import sample_token

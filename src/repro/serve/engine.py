@@ -1,0 +1,78 @@
+"""Batched serving engine: prefill once, decode in steps, per-sequence
+stopping, optional SONIC-compressed weights.
+
+The engine owns two compiled programs (prefill_step, decode_step) built from
+the arch registry; the dry-run lowers the same programs.  Serving the SONIC
+way: ``convert_params`` rewrites eligible linear weights into the clustered /
+block-sparse serving formats of ``repro.core.sonic_layers`` (CPU smoke path
+uses the jnp fallbacks; on TPU the Pallas kernels engage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.mesh import MeshPlan
+from repro.serve.sampling import sample_token
+from repro.utils.logging import get_logger
+
+log = get_logger("serve")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_token: int = -1  # -1 ⇒ never stop early
+    jit: bool = True
+
+
+class ServeEngine:
+    def __init__(self, arch, params, plan: MeshPlan, sc: ServeConfig, cfg=None):
+        self.arch, self.params, self.plan, self.sc = arch, params, plan, sc
+        self.cfg = cfg or arch.cfg
+
+        def prefill(params, tokens):
+            cache = arch.init_cache(tokens.shape[0], sc.max_len, plan, cfg=self.cfg)
+            logits, cache = arch.forward(
+                params, plan, cfg=self.cfg, tokens=tokens, cache=cache
+            )
+            return logits, cache
+
+        def decode(params, cache, token, pos):
+            logits, cache = arch.forward(
+                params, plan, cfg=self.cfg, tokens=token,
+                cache=cache, cache_pos=pos,
+            )
+            return logits[:, 0], cache
+
+        self._prefill = jax.jit(prefill) if sc.jit else prefill
+        self._decode = jax.jit(decode) if sc.jit else decode
+
+    def generate(
+        self, prompts: jax.Array, n_new: int, key: jax.Array | None = None
+    ) -> jax.Array:
+        """prompts (B, S_prompt) int32 → (B, n_new) generated tokens."""
+        sc = self.sc
+        b, s_prompt = prompts.shape
+        assert s_prompt + n_new <= sc.max_len, "exceeds cache"
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, cache = self._prefill(self.params, prompts)
+        tok = sample_token(logits[:, -1], key, sc.temperature, sc.top_k)
+        out = [tok]
+        done = jnp.zeros((b,), bool)
+        pos = jnp.full((b,), s_prompt, jnp.int32)
+        for i in range(n_new - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok[:, None], pos)
+            tok = sample_token(logits, sub, sc.temperature, sc.top_k)
+            if sc.eos_token >= 0:
+                done = done | (tok == sc.eos_token)
+                tok = jnp.where(done, sc.eos_token, tok)
+            out.append(tok)
+            pos = pos + 1
+        return jnp.stack(out, axis=1)

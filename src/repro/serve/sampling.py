@@ -1,0 +1,21 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(
+    logits: jax.Array,  # (B, V)
+    key: jax.Array,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jax.Array:
+    """→ (B,) int32 next tokens."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    return jax.random.categorical(key, lf).astype(jnp.int32)

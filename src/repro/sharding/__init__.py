@@ -1,0 +1,1 @@
+from repro.sharding.mesh import MeshPlan, make_plan

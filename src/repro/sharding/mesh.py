@@ -1,0 +1,134 @@
+"""MeshPlan — the one object that tells models and launchers how to shard.
+
+Axis conventions (DESIGN.md §5):
+  * ``data`` (+ ``pod`` on the multi-pod mesh) — batch / FSDP axis ("dp").
+  * ``model``                                  — TP / SP / EP axis ("tp").
+
+A ``MeshPlan`` with ``mesh=None`` degrades every constraint to the identity, so
+the same model code runs single-device (smoke tests) and fully sharded
+(dry-run / production) without branches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    mesh: Mesh | None = None
+    dp_axes: tuple[str, ...] = ("data",)  # ("pod", "data") on multi-pod
+    tp_axis: str = "model"
+    # per-(arch, shape) switches
+    attn_shard: Literal["heads", "head_dim", "seq"] = "heads"
+    kv_repeat: int = 1
+    shard_batch: bool = True  # False for global_batch < |dp| (e.g. long_500k)
+    seq_shard_cache: bool = False  # flash-decode style KV-seq sharding (§Perf)
+    cache_quant_int8: bool = False  # SONIC C2 applied to the KV cache (§Perf)
+    serve_stationary: bool = False  # TP-only (no-FSDP) serving weights (§Perf)
+
+    # -- spec helpers ------------------------------------------------------
+    @property
+    def dp(self):  # use inside PartitionSpec positions
+        return self.dp_axes if (self.shard_batch and self.mesh) else None
+
+    @property
+    def tp(self):
+        return self.tp_axis if self.mesh else None
+
+    def spec(self, *entries) -> P:
+        return P(*entries)
+
+    def ns(self, *entries) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*entries))
+
+    def constrain(self, x: jax.Array, *entries) -> jax.Array:
+        """with_sharding_constraint if a mesh is present, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*entries))
+        )
+
+    def cache_spec(self) -> tuple:
+        """PartitionSpec entries for a KV cache (B, S_max, KH_eff, Dh).
+
+        heads mode:    batch over dp, heads over tp.
+        head_dim mode: batch over dp, Dh over tp.
+        seq mode:      batch over dp, SEQUENCE over tp (flash-decode style —
+                       heads don't divide tp; attention reductions over the
+                       sharded seq dim psum under GSPMD).
+        With ``seq_shard_cache`` and an unsharded batch (long_500k), the idle
+        dp axes shard the cache sequence dim instead.
+        """
+        if self.attn_shard == "seq":
+            return (self.dp, self.tp, None, None)
+        head_entries = (
+            (self.tp, None) if self.attn_shard == "heads" else (None, self.tp)
+        )
+        if self.seq_shard_cache and not self.shard_batch:
+            return (None, self.dp_axes if self.mesh else None, *head_entries)
+        return (self.dp, None, *head_entries)
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(
+            __import__("numpy").prod([self.mesh.shape[a] for a in self.dp_axes])
+        )
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+
+def _attention_mode(cfg: ModelConfig, tp: int) -> tuple[str, int]:
+    """Pick the attention sharding mode and the KV replication factor.
+
+    heads: n_heads divides tp (KV heads replicated as needed).
+    seq:   n_heads doesn't divide tp (qwen2-vl: 12H vs 16) — queries stay
+           sequence-sharded, K/V replicate (cheap: few KV heads).  §Perf B
+           measured head_dim-sharding at 11 GB/step of score psums; seq mode
+           removes them.
+    """
+    from repro.models.layers import kv_repeat_factor
+
+    if cfg.n_heads % tp == 0:
+        r = kv_repeat_factor(cfg, tp)
+        return "heads", r
+    return "seq", 1
+
+
+def make_plan(
+    cfg: ModelConfig,
+    mesh: Mesh | None,
+    global_batch: int | None = None,
+    **overrides,
+) -> MeshPlan:
+    if mesh is None:
+        return MeshPlan(mesh=None, **overrides)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tp = mesh.shape["model"]
+    attn_shard, kv_rep = _attention_mode(cfg, tp)
+    dp_total = int(__import__("numpy").prod([mesh.shape[a] for a in dp_axes]))
+    shard_batch = global_batch is None or (global_batch % dp_total == 0)
+    kw = dict(
+        mesh=mesh,
+        dp_axes=dp_axes,
+        tp_axis="model",
+        attn_shard=attn_shard,
+        kv_repeat=kv_rep,
+        shard_batch=shard_batch,
+    )
+    kw.update(overrides)
+    return MeshPlan(**kw)

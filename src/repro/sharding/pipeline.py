@@ -1,0 +1,103 @@
+"""GPipe-style pipeline parallelism over an existing mesh axis.
+
+``pipeline_apply`` runs a stage function over S stages laid out on a chosen
+mesh axis, streaming M microbatches through the classic GPipe schedule
+(S + M − 1 ticks, bubble fraction (S−1)/(S+M−1)).  Stage-to-stage transfer is
+one ``jax.lax.ppermute`` per tick — the collective-permute pattern a TPU pod
+realizes on neighbouring ICI links.
+
+This composes with the framework's other axes: the stage axis is typically a
+factor of the ``model`` axis (PP × TP) or the ``pod`` axis (cross-pod PP),
+while FSDP/TP specs keep working inside each stage.  Used by
+``tests/test_pipeline.py`` (numerical equivalence vs the sequential model)
+and available to launchers via MeshPlan; the 62-cell dry-run keeps the
+non-PP configuration as its baseline (DESIGN.md §5).
+
+Deliberately parallelism-minimal: the schedule is data-driven (a scan over
+ticks), so it lowers to one compact while loop and works under jit on any
+mesh size.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(
+    stage_fn: Callable[[Any, jax.Array, jax.Array], jax.Array],
+    stage_params: Any,  # pytree with leading (S,) stage axis
+    x: jax.Array,  # (M, mb, ...) microbatched input
+    mesh: Mesh,
+    axis: str = "model",
+) -> jax.Array:
+    """Run S pipeline stages over M microbatches.
+
+    ``stage_fn(params_for_stage, microbatch, stage_index)`` must be
+    shape-preserving (classic homogeneous-trunk pipelining).  Returns the
+    (M, mb, ...) outputs after all S stages.
+    """
+    s = mesh.shape[axis]
+    m = x.shape[0]
+    ticks = s + m - 1
+
+    def per_stage(params_blk, x_blk):
+        # inside shard_map: params_blk has leading (1,) stage dim; x_blk is
+        # the full (M, mb, ...) input only on stage 0 (others ignore it)
+        params_local = jax.tree_util.tree_map(lambda a: a[0], params_blk)
+        stage_id = jax.lax.axis_index(axis)
+
+        def tick(carry, t):
+            buf, outs = carry  # buf: (mb, ...) current resident microbatch
+            # stage 0 injects microbatch t (when in range); others take the
+            # value permuted from the previous stage at the end of last tick
+            inject = jnp.where(t < m, t, m - 1)
+            fresh = x_blk[inject]
+            cur = jnp.where(stage_id == 0, fresh, buf)
+            live = (t - stage_id >= 0) & (t - stage_id < m)
+            y = stage_fn(params_local, cur, stage_id)
+            y = jnp.where(live, y, cur)
+            # pass to the next stage (ring; the wrap-around edge is unused)
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % s) for i in range(s)]
+            )
+            # last stage collects its finished microbatch
+            done_idx = t - (s - 1)
+            take = (stage_id == s - 1) & (done_idx >= 0) & (done_idx < m)
+            outs = jax.lax.cond(
+                take,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(done_idx, 0), 0
+                ),
+                lambda o: o,
+                outs,
+            )
+            return (nxt, outs), None
+
+        buf0 = jnp.zeros_like(x_blk[0])
+        outs0 = jnp.zeros_like(x_blk)
+        (_, outs), _ = jax.lax.scan(
+            tick, (buf0, outs0), jnp.arange(ticks, dtype=jnp.int32)
+        )
+        # broadcast the last stage's collected outputs to every stage so the
+        # out_spec can be replicated (psum over one-hot ownership)
+        owner = (jax.lax.axis_index(axis) == s - 1).astype(outs.dtype)
+        return jax.lax.psum(outs * owner, axis)
+
+    in_specs = (
+        jax.tree_util.tree_map(lambda _: P(axis), stage_params),
+        P(),  # input replicated; stage 0 reads it
+    )
+    fn = shard_map(
+        per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(),
+        check_rep=False,
+    )
+    return fn(stage_params, x)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble: (S−1) / (S+M−1)."""
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)

@@ -1,0 +1,3 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_state import TrainState
+from repro.train.loop import TrainConfig, build_train_step, train_loop

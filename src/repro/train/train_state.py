@@ -1,0 +1,67 @@
+"""TrainState pytree: params + optimizer moments + sparsity masks + step.
+
+Registered as a pytree so it passes straight through jit/scan and the
+checkpointer.  ``abstract()`` builds the ShapeDtypeStruct mirror used by the
+dry-run (with shardings attached by ``sharding.partition``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: dict[str, Any]
+    masks: Any | None  # sparsity masks (same tree as params) or None
+    step: jax.Array  # () int32
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.masks, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(params: Any, opt_cfg, sparsity_cfg=None) -> TrainState:
+    from repro.core.sparsity import build_masks
+    from repro.train.optimizer import adamw_init
+
+    masks = None
+    if sparsity_cfg is not None:
+        masks = build_masks(params, sparsity_cfg, step=0)
+    return TrainState(
+        params=params,
+        opt_state=adamw_init(params, opt_cfg),
+        masks=masks,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_train_state(
+    abstract_params: Any, opt_cfg, with_masks: bool = False
+) -> TrainState:
+    """ShapeDtypeStruct mirror of a TrainState (dry-run, no allocation)."""
+    mdt = jnp.dtype(opt_cfg.moment_dtype)
+    mom = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, mdt), abstract_params
+    )
+    masks = (
+        jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), abstract_params
+        )
+        if with_masks
+        else None
+    )
+    return TrainState(
+        params=abstract_params,
+        opt_state={"m": mom, "v": jax.tree_util.tree_map(lambda x: x, mom)},
+        masks=masks,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )

@@ -1,0 +1,7 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_param_count,
+    named_leaves,
+    tree_map_with_path_names,
+)
+from repro.utils.logging import get_logger

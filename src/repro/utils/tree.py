@@ -1,0 +1,44 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - defensive
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def named_leaves(tree: Any) -> Iterator[tuple[str, Any]]:
+    """Yield (slash/joined/path, leaf) for every leaf in the tree."""
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    for path, leaf in leaves:
+        yield _path_name(path), leaf
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives (path_name, leaf)."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_name(p), x), tree)
+
+
+def tree_param_count(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size_bytes(tree: Any) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total

@@ -1,0 +1,7 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS in-module and runs via subprocess) — never force device counts
+# here (per the brief).
+jax.config.update("jax_platform_name", "cpu")

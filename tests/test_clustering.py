@@ -1,0 +1,73 @@
+"""C2 — weight clustering unit + property tests (paper §III.B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (
+    ClusteredWeight,
+    ClusteringConfig,
+    cluster_params,
+    cluster_weights,
+    clustering_error,
+    density_based_centroids,
+    storage_bits,
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(c=st.sampled_from([4, 8, 16, 64]), seed=st.integers(0, 99))
+def test_at_most_c_unique_weights(c, seed):
+    """The §III.B property: C centroids ⇒ ≤ C unique weights."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 64))
+    dense, packed = cluster_weights(w, ClusteringConfig(num_clusters=c, iters=5))
+    assert len(np.unique(np.asarray(dense))) <= c
+    assert packed.codebook.shape == (c,)
+
+
+def test_preserve_zero_keeps_sparsity():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    w = w * (jnp.abs(w) > 0.8)  # sparse input
+    n_zero = int((np.asarray(w) == 0).sum())
+    dense, _ = cluster_weights(w, ClusteringConfig(num_clusters=16, preserve_zero=True))
+    assert int((np.asarray(dense) == 0).sum()) >= n_zero
+
+
+def test_density_centroids_track_mass():
+    # bimodal: centroids should concentrate near the two modes
+    key = jax.random.PRNGKey(1)
+    w = jnp.concatenate(
+        [jax.random.normal(key, (5000,)) * 0.1 - 2.0,
+         jax.random.normal(jax.random.PRNGKey(2), (5000,)) * 0.1 + 2.0]
+    )
+    cents = np.asarray(density_based_centroids(w, 8))
+    assert (np.abs(np.abs(cents) - 2.0) < 0.5).all()
+
+
+def test_more_clusters_less_error():
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 64))
+    errs = [clustering_error(w, ClusteringConfig(num_clusters=c)) for c in (4, 16, 64)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_index_bits_and_storage():
+    cfg = ClusteringConfig(num_clusters=64)
+    assert cfg.index_bits == 6  # the paper's 6-bit DAC requirement
+    assert storage_bits((100, 100), cfg) == 100 * 100 * 6 + 64 * 32
+
+
+def test_cluster_params_skips_excluded():
+    params = {
+        "ffn": {"kernel": jax.random.normal(jax.random.PRNGKey(0), (32, 32))},
+        "norm": {"scale": jnp.ones((32,))},
+    }
+    clustered, packed = cluster_params(params, ClusteringConfig(num_clusters=8))
+    assert "ffn/kernel" in packed
+    assert all("norm" not in k for k in packed)
+
+
+def test_packed_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(5), (16, 16))
+    dense, packed = cluster_weights(w, ClusteringConfig(num_clusters=8))
+    assert np.allclose(np.asarray(packed.dense()), np.asarray(dense), atol=1e-6)

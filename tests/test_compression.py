@@ -1,0 +1,87 @@
+"""C3 — zero-compression dataflow exactness (paper §III.C).
+
+The paper claims the compression "does not impact the output vector
+calculation accuracy" — these property tests hold it to that, bit-for-bit in
+fp32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.activation_sparsity import topk_activation_mask, topk_compress
+from repro.core.compression import (
+    compress_conv_patches,
+    compress_fc,
+    compressed_conv_apply,
+    compressed_fc_apply,
+    compressed_fc_matvec,
+    conv2d_via_im2col,
+    im2col,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d_out=st.integers(2, 32),
+    d_in=st.integers(2, 48),
+    zero_frac=st.floats(0.0, 0.95),
+    seed=st.integers(0, 999),
+)
+def test_fc_compression_exact(d_out, d_in, zero_frac, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.normal(k1, (d_out, d_in))
+    x = jax.random.normal(k2, (d_in,))
+    x = x * (jax.random.uniform(k3, (d_in,)) > zero_frac)
+    c = compress_fc(w, x)
+    got = np.asarray(compressed_fc_apply(c))
+    want = np.asarray(w @ x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # compressed operand really is dense
+    assert (np.asarray(c.x_nz) != 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(zero_frac=st.floats(0.2, 0.9), seed=st.integers(0, 99))
+def test_static_k_exact_when_k_covers_nnz(zero_frac, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.normal(k1, (16, 64))
+    x = jax.random.normal(k2, (64,)) * (jax.random.uniform(k3, (64,)) > zero_frac)
+    nnz = int((np.asarray(x) != 0).sum())
+    got = np.asarray(compressed_fc_matvec(w, x, max(nnz, 1)))
+    np.testing.assert_allclose(got, np.asarray(w @ x), rtol=1e-5, atol=1e-5)
+
+
+def test_im2col_matches_lax_conv():
+    ifm = jax.random.normal(jax.random.PRNGKey(0), (9, 9, 3))
+    ker = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 5))
+    ours = conv2d_via_im2col(ifm, ker, stride=1, padding=1)
+    ref = jax.lax.conv_general_dilated(
+        ifm[None], ker, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(weight_zero=st.floats(0.0, 0.9), seed=st.integers(0, 99))
+def test_conv_compression_exact(weight_zero, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    ifm = jax.random.normal(k1, (6, 6, 2))
+    ker = jax.random.normal(k2, (3, 3, 2, 4))
+    ker = ker * (jax.random.uniform(k3, ker.shape) > weight_zero)
+    ref = conv2d_via_im2col(ifm, ker, 1, 1)
+    c = compress_conv_patches(ifm, ker, 1, 1)
+    got = compressed_conv_apply(c, 6, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 32), seed=st.integers(0, 99))
+def test_topk_mask_keeps_k(k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+    m = np.asarray(topk_activation_mask(x, k))
+    assert (m.sum(-1) == min(k, 32)).all()
+    vals, idx = topk_compress(x, k)
+    assert vals.shape == (4, min(k, 32))
+    assert len(np.unique(np.asarray(idx))) == min(k, 32)

@@ -1,0 +1,97 @@
+"""Roofline machinery: analytic cost sanity, HLO collective parsing, terms."""
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, get_config
+from repro.roofline.analysis import (
+    CollectiveOp,
+    _parse_computations,
+    _while_trip_counts,
+    parse_collectives,
+    roofline_terms,
+)
+from repro.roofline.analytic import _param_counts, analytic_cost
+
+
+def test_param_counts_match_eval_shape():
+    """Closed-form N_total vs actual initialized trees, all 10 archs."""
+    from repro.models.registry import get_arch
+    from repro.utils.tree import tree_param_count
+
+    for aid in ("tinyllama-1.1b", "internlm2-1.8b", "rwkv6-3b",
+                "moonshot-v1-16b-a3b", "zamba2-7b", "hubert-xlarge"):
+        arch = get_arch(aid)
+        actual = tree_param_count(arch.abstract_params())
+        _, total = _param_counts(arch.cfg)
+        assert abs(actual - total) / actual < 0.02, (aid, actual, total)
+
+
+def test_six_nd_rule_for_dense_train():
+    cfg = get_config("tinyllama-1.1b")
+    cost = analytic_cost(cfg, SHAPES["train_4k"])
+    tokens = 256 * 4096
+    six_nd = 6.0 * cost.n_active * tokens
+    # model_flops = 6·N·D + causal attention ⇒ within ~25% of the rule
+    assert six_nd <= cost.model_flops <= 1.4 * six_nd
+
+
+def test_decode_is_weight_bound_in_analytic_model():
+    cfg = get_config("command-r-35b")
+    cost = analytic_cost(cfg, SHAPES["decode_32k"])
+    # decode arithmetic intensity ≈ 2 flop/byte ⇒ memory term dominates at
+    # v5e's 240 flop/byte ridge
+    terms = roofline_terms(cost.model_flops, cost.hlo_flops_est,
+                           cost.hbm_bytes, 0.0, 256)
+    assert terms.dominant == "memory"
+
+
+def test_train_is_compute_bound_in_analytic_model():
+    cfg = get_config("command-r-35b")
+    cost = analytic_cost(cfg, SHAPES["train_4k"])
+    terms = roofline_terms(cost.model_flops, cost.hlo_flops_est,
+                           cost.hbm_bytes, 0.0, 256)
+    assert terms.dominant == "compute"
+
+
+_HLO = """\
+ENTRY %main (a: f32[8,128]) -> f32[] {
+  %w = f32[8,128]{1,0} parameter(0)
+  %t = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[] reduce(%t)
+}
+%body.1 (arg: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %ar = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %x), replica_groups=[2,16]<=[32]
+  %ag = f32[8,2048]{1,0} all-gather(f32[8,128]{1,0} %x), replica_groups=[2,16]<=[32]
+}
+%cond.1 (arg: (s32[], f32[8,128])) -> pred[] {
+  %c = s32[] constant(24)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+"""
+
+
+def test_collective_parser_trip_counts_and_ring_costs():
+    colls = parse_collectives(_HLO)
+    kinds = {c.kind: c for c in colls}
+    assert set(kinds) == {"all-reduce", "all-gather"}
+    ar = kinds["all-reduce"]
+    assert ar.trip_count == 24
+    assert ar.group_size == 16
+    bytes_op = 8 * 128 * 4
+    np.testing.assert_allclose(ar.wire_bytes, 2 * bytes_op * 15 / 16 * 24)
+    ag = kinds["all-gather"]
+    out_bytes = 8 * 2048 * 4
+    np.testing.assert_allclose(ag.wire_bytes, out_bytes * 15 / 16 * 24)
+
+
+def test_roofline_dominant_selection():
+    t = roofline_terms(1e12, 2e12, 1e9, 1e6, 256)
+    assert t.useful_fraction == 0.5
+    assert t.dominant in ("compute", "memory", "collective")
+    assert t.step_time_est_s == max(t.compute_s, t.memory_s, t.collective_s)
+
+
+def test_moe_active_params_much_smaller_than_total():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    cost = analytic_cost(cfg, SHAPES["train_4k"])
+    assert cost.n_active < 0.25 * cost.n_total

@@ -1,0 +1,106 @@
+"""C1 — sparsification unit + property tests (paper §III.A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsity import (
+    SparsityConfig,
+    approx_quantile,
+    apply_masks,
+    block_prune_mask,
+    build_masks,
+    gradual_sparsity_schedule,
+    l2_regularization,
+    magnitude_prune_mask,
+    sparsity_of,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(4, 64),
+    cols=st.integers(4, 64),
+    sparsity=st.floats(0.0, 0.95),
+    seed=st.integers(0, 2**16),
+)
+def test_magnitude_mask_hits_target(rows, cols, sparsity, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    m = magnitude_prune_mask(w, sparsity)
+    achieved = 1 - float(np.mean(np.asarray(m)))
+    # histogram-quantile accuracy, floored by element granularity (tiny mats)
+    tol = max(0.05, 2.0 / (rows * cols))
+    assert abs(achieved - sparsity) < tol
+
+
+@settings(max_examples=15, deadline=None)
+@given(sparsity=st.floats(0.1, 0.9), seed=st.integers(0, 999))
+def test_mask_keeps_largest(sparsity, seed):
+    """Property: every surviving |w| ≥ every pruned |w| (the §III.A rule)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 32))
+    m = np.asarray(magnitude_prune_mask(w, sparsity))
+    aw = np.abs(np.asarray(w))
+    kept = aw[m > 0]
+    pruned = aw[m == 0]
+    if len(kept) and len(pruned):
+        assert kept.min() >= pruned.max() - 1e-6
+
+
+def test_block_mask_structure():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    m = np.asarray(block_prune_mask(w, 0.5, (16, 32)))
+    blocks = m.reshape(4, 16, 4, 32).transpose(0, 2, 1, 3).reshape(16, -1)
+    per_block = blocks.mean(axis=1)
+    assert set(np.round(per_block, 6)) <= {0.0, 1.0}, "blocks must be all-0 or all-1"
+    assert abs(per_block.mean() - 0.5) <= 0.3
+
+
+def test_block_mask_nondivisible_falls_back():
+    w = jax.random.normal(jax.random.PRNGKey(0), (48, 64))
+    m = block_prune_mask(w, 0.5, (128, 128))  # not divisible — unstructured
+    assert abs(1 - float(np.mean(np.asarray(m))) - 0.5) < 0.05
+
+
+def test_gradual_schedule_endpoints():
+    assert float(gradual_sparsity_schedule(0, 0.8, 0, 100)) == pytest.approx(0.0)
+    assert float(gradual_sparsity_schedule(100, 0.8, 0, 100)) == pytest.approx(0.8)
+    assert float(gradual_sparsity_schedule(500, 0.8, 0, 100)) == pytest.approx(0.8)
+    mid = float(gradual_sparsity_schedule(50, 0.8, 0, 100))
+    assert 0.0 < mid < 0.8
+    # monotone
+    vals = [float(gradual_sparsity_schedule(t, 0.8, 0, 100)) for t in range(0, 101, 10)]
+    assert all(a <= b + 1e-6 for a, b in zip(vals, vals[1:]))
+
+
+def test_build_masks_excludes_sensitive_layers():
+    params = {
+        "layers": {"ffn": {"wi": {"kernel": jnp.ones((64, 64))}}},
+        "embed": {"embedding": jnp.ones((100, 16))},
+        "final_norm": {"scale": jnp.ones((16,))},
+    }
+    cfg = SparsityConfig(target_sparsity=0.9, block=(8, 8))
+    masks = build_masks(params, cfg)
+    assert float(masks["embed"]["embedding"].mean()) == 1.0
+    assert float(masks["final_norm"]["scale"].mean()) == 1.0
+
+
+def test_apply_masks_zeroes():
+    params = {"w": jnp.ones((4, 4))}
+    masks = {"w": jnp.eye(4)}
+    out = apply_masks(params, masks)
+    assert float(out["w"].sum()) == 4.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=st.floats(0.05, 0.95), seed=st.integers(0, 99))
+def test_approx_quantile_close_to_exact(q, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (20000,))
+    approx = float(approx_quantile(x, q))
+    exact = float(jnp.quantile(x, q))
+    assert abs(approx - exact) < 0.02
+
+
+def test_l2_excludes_norms():
+    params = {"w": jnp.ones((4, 4)), "norm_scale": jnp.full((4,), 100.0)}
+    assert float(l2_regularization(params)) == pytest.approx(16.0)

@@ -1,0 +1,104 @@
+"""End-to-end behaviour of the paper's system: sparsity-aware training →
+weight clustering → compressed serving, with accuracy retention (the Table 3
+argument) on a teacher task, plus the full SONIC serving pipeline on an LM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering import ClusteringConfig, cluster_params
+from repro.core.sparsity import SparsityConfig, build_masks, apply_masks, sparsity_of
+from repro.data.teacher import TeacherTask
+from repro.models import cnn as cnn_lib
+from repro.models.registry import get_arch
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.sharding.mesh import MeshPlan
+
+PLAN = MeshPlan()
+
+
+def _train_cnn(task, cfg, steps=120, lr=3e-3):
+    params = cnn_lib.init_params(cfg, jax.random.PRNGKey(0))
+
+    def loss_fn(p, x, y):
+        logits = cnn_lib.forward(p, cfg, x)
+        return -jnp.mean(
+            jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], 1)
+        )
+
+    @jax.jit
+    def step(p, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+        return p, l
+
+    for i in range(steps):
+        x, y = task.batch(i)
+        params, l = step(params, x, y)
+    return params
+
+
+def test_sparsify_cluster_accuracy_retention():
+    """The paper's central accuracy claim (§V.A): sparsified + clustered
+    models stay comparable to the dense baseline."""
+    cfg = cnn_lib.MNIST_CNN
+    task = TeacherTask(cfg)
+    params = _train_cnn(task, cfg)
+    acc_dense = task.accuracy(params)
+    assert acc_dense > 0.5, f"teacher task unlearnable ({acc_dense})"
+
+    # sparsify at 50% + cluster to 64 centroids (Table 3 regime)
+    scfg = SparsityConfig(target_sparsity=0.5, block=(1, 1), exclude=("bias",))
+    masks = build_masks(params, scfg)
+    sparse = apply_masks(params, masks)
+    clustered, _ = cluster_params(
+        sparse, ClusteringConfig(num_clusters=64, exclude=("bias",))
+    )
+    acc_sc = task.accuracy(clustered)
+    assert acc_sc > acc_dense - 0.15, (acc_dense, acc_sc)
+    w = np.asarray(clustered["conv"][0]["kernel"])
+    assert sparsity_of(w) >= 0.4  # zeros survived clustering (preserve_zero)
+    assert len(np.unique(w)) <= 64 + 1
+
+
+def test_lm_sonic_serving_pipeline():
+    """Dense LM → clustered/block-sparse serving formats → generation works
+    and format fidelity is finite/close."""
+    from repro.core.sonic_layers import (
+        SonicExecutionConfig, convert_linear, sonic_linear_apply,
+    )
+
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(arch, params, PLAN, ServeConfig(max_len=48))
+    prompts = jnp.ones((2, 8), jnp.int32)
+    base = eng.generate(prompts, 8)
+    assert base.shape == (2, 8)
+
+    w = params["layers"]["ffn"]["wi"]["kernel"][0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, w.shape[0]))
+    dense_out = x @ w
+    for mode, kw in [
+        ("clustered", dict(num_clusters=64)),
+        ("block_sparse", dict(weight_sparsity=0.25, block=(16, 16))),
+    ]:
+        cfg = SonicExecutionConfig(mode=mode, **kw)
+        p = convert_linear(w, cfg)
+        out = sonic_linear_apply(p, x, cfg)
+        rel = float(jnp.linalg.norm(out - dense_out) / jnp.linalg.norm(dense_out))
+        assert rel < 0.8, (mode, rel)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_photonic_fidelity_preserves_quality():
+    """§IV.B fidelity: 6-bit-clustered weights + 16-bit activations through
+    the photonic forward model ≈ exact matvec."""
+    from repro.core.clustering import ClusteringConfig, pack_clustered
+    from repro.core.vdu import VDUConfig, photonic_forward
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    x = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    cw = pack_clustered(w, ClusteringConfig(num_clusters=64))
+    y = photonic_forward(w, x, VDUConfig(), codebook=cw.codebook)
+    rel = float(jnp.linalg.norm(y - w @ x) / jnp.linalg.norm(w @ x))
+    assert rel < 0.1  # 64 clusters ⇒ a few % error — the Table 3 argument
