@@ -1,0 +1,16 @@
+# Tier-1 verification + CPU smoke benchmarks (mirrors .github/workflows/ci.yml)
+
+PY ?= python
+
+.PHONY: test bench-smoke bench ci
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-smoke:
+	BENCH_REPEATS=1 PYTHONPATH=src $(PY) benchmarks/run.py --only kernel_traffic,serve_decode
+
+bench:
+	PYTHONPATH=src $(PY) benchmarks/run.py
+
+ci: test bench-smoke

@@ -1,7 +1,16 @@
 """Benchmark harness — one function per paper table/figure + roofline bench.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
-metric), with the full tables printed between.
+metric), with the full tables printed between.  ``us_per_call`` is a
+steady-state number: every bench gets one untimed warmup call (absorbing JIT
+compile time), then the median of ``BENCH_REPEATS`` timed repeats (default 3,
+env-overridable), each fenced with ``jax.block_until_ready``.  Repeat calls
+run with stdout suppressed so tables print once.
+
+``serve_decode`` additionally writes machine-readable ``BENCH_serve.json``
+(prefill/decode tokens-per-second for the compiled vs python-loop serving
+engines, per batch size) so the serving-perf trajectory is tracked across
+PRs.  Select a subset with ``--only name1,name2``.
 
   table1_table3   — CNN zoo: our vs paper parameter counts; sparsify+cluster
                     accuracy retention on the MNIST teacher task   (§V.A)
@@ -15,6 +24,9 @@ metric), with the full tables printed between.
 """
 from __future__ import annotations
 
+import argparse
+import contextlib
+import io
 import json
 import os
 import time
@@ -26,12 +38,34 @@ import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
 
+BENCH_REPEATS = max(int(os.environ.get("BENCH_REPEATS", "3")), 1)
 
-def _timed(name: str, fn: Callable, derived_fmt: Callable[[object], str]):
-    t0 = time.time()
-    out = fn()
-    us = (time.time() - t0) * 1e6
-    ROWS.append((name, us, derived_fmt(out)))
+
+def _block(out) -> None:
+    """Fence device work (handles pytrees, ignores non-array leaves)."""
+    jax.block_until_ready(out)
+
+
+def _timed(name: str, fn: Callable, derived_fmt: Callable[[object], str],
+           self_timing: bool = False):
+    if self_timing:
+        # fn does its own warmup/repeat discipline (e.g. serve_decode's
+        # best-of-N) — run it once and record that single wall time
+        t0 = time.perf_counter()
+        out = fn()
+        _block(out)
+        ROWS.append((name, (time.perf_counter() - t0) * 1e6, derived_fmt(out)))
+        return out
+    out = fn()  # warmup: JIT compile + first tables print
+    _block(out)
+    times = []
+    for _ in range(BENCH_REPEATS):
+        with contextlib.redirect_stdout(io.StringIO()):
+            t0 = time.perf_counter()
+            out = fn()
+            _block(out)
+            times.append(time.perf_counter() - t0)
+    ROWS.append((name, float(np.median(times)) * 1e6, derived_fmt(out)))
     return out
 
 
@@ -228,6 +262,83 @@ def kernel_traffic():
     return {"clustered_x": dense_b / cl_b, "sonic_x": dense_b / sonic_b}
 
 
+# ------------------------------------------------------------ serve decode
+
+
+def serve_decode():
+    """Compiled-loop vs python-loop serving engine: prefill + decode tok/s
+    per batch size, written to BENCH_serve.json (env BENCH_SERVE_JSON)."""
+    from repro.models.registry import get_arch
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.sharding.mesh import MeshPlan
+
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    plan = MeshPlan()
+    s_prompt, n_new = 16, 33
+    reps = max(BENCH_REPEATS, 5)
+    key = jax.random.PRNGKey(0)
+
+    def best(fn, setup=lambda: None):
+        # best-of-reps: scheduler noise on shared CPU runners only ever adds
+        # time, so min is the faithful steady-state estimator here
+        ts = []
+        for _ in range(reps):
+            args = setup()
+            _block(args)
+            t0 = time.perf_counter()
+            _block(fn(args))
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    print("\n== serve_decode: compiled loop vs python loop (CPU smoke) ==")
+    print(f"{'batch':>5s} {'prefill tok/s':>13s} {'decode tok/s':>12s} "
+          f"{'python tok/s':>12s} {'speedup':>7s}")
+    out = {"arch": "tinyllama-1.1b (reduced)", "prompt_len": s_prompt,
+           "new_tokens": n_new, "repeats": reps, "batch": {}}
+    for b in (1, 4):
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(b), (b, s_prompt), 0, arch.cfg.vocab_size
+        ).astype(jnp.int32)
+        sc = dict(max_len=s_prompt + n_new + 1, temperature=0.0)
+        eng = ServeEngine(arch, params, plan, ServeConfig(**sc, loop="scan"))
+        eng_py = ServeEngine(arch, params, plan, ServeConfig(**sc, loop="python"))
+
+        _block(eng.generate(prompts, n_new, key))  # compile both programs
+        _block(eng_py.generate(prompts, n_new, key))
+
+        prefill_t = best(lambda _: eng._prefill(params, prompts, key))
+        decode_t = best(
+            lambda st: eng._decode_loop(n_new - 1, params, *st),
+            setup=lambda: (lambda t, c, p, d: (c, t, p, d, key))(
+                *eng._prefill(params, prompts, key)
+            ),
+        )
+        python_total = best(lambda _: eng_py.generate(prompts, n_new, key))
+        python_decode_t = max(python_total - prefill_t, 1e-9)
+
+        row = {
+            "prefill_tok_s": b * s_prompt / prefill_t,
+            "decode_tok_s_compiled": b * (n_new - 1) / decode_t,
+            "decode_tok_s_python": b * (n_new - 1) / python_decode_t,
+        }
+        row["decode_speedup"] = (
+            row["decode_tok_s_compiled"] / row["decode_tok_s_python"]
+        )
+        out["batch"][str(b)] = row
+        print(f"{b:5d} {row['prefill_tok_s']:13.1f} "
+              f"{row['decode_tok_s_compiled']:12.1f} "
+              f"{row['decode_tok_s_python']:12.1f} "
+              f"{row['decode_speedup']:6.1f}x")
+
+    path = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+    out["min_speedup"] = min(r["decode_speedup"] for r in out["batch"].values())
+    return out
+
+
 # ---------------------------------------------------------------- roofline
 
 
@@ -268,10 +379,23 @@ def main() -> None:
          lambda o: f"vs_nullhop={o['NullHop']:.2f}x"),
         ("fig10_epb", fig10_epb, lambda o: f"vs_nullhop={o['NullHop']:.2f}x"),
         ("kernel_traffic", kernel_traffic, lambda o: f"sonic={o['sonic_x']:.1f}x"),
+        ("serve_decode", serve_decode,
+         lambda o: f"decode_speedup={o['min_speedup']:.1f}x"),
         ("roofline_table", roofline_table, lambda o: f"cells={o.get('cells', 0)}"),
     ]
+    self_timed = {"serve_decode"}
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names (default: all)")
+    args = ap.parse_args()
+    if args.only:
+        want = set(args.only.split(","))
+        unknown = want - {n for n, *_ in benches}
+        if unknown:
+            raise SystemExit(f"unknown bench(es): {sorted(unknown)}")
+        benches = [b for b in benches if b[0] in want]
     for name, fn, fmt in benches:
-        _timed(name, fn, fmt)
+        _timed(name, fn, fmt, self_timing=name in self_timed)
     print("\nname,us_per_call,derived")
     for name, us, derived in ROWS:
         print(f"{name},{us:.0f},{derived}")

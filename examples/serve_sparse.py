@@ -30,8 +30,15 @@ def main():
     )
 
     prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 256).astype(jnp.int32)
-    for name, p in [("dense", params), ("sonic (sparse+clustered)", sonic_params)]:
-        eng = ServeEngine(arch, p, plan, ServeConfig(max_len=96, temperature=0.0))
+    for name, p, loop in [
+        ("dense / python loop", params, "python"),
+        ("dense / compiled scan", params, "scan"),
+        ("sonic / compiled scan", sonic_params, "scan"),
+    ]:
+        eng = ServeEngine(
+            arch, p, plan, ServeConfig(max_len=96, temperature=0.0, loop=loop)
+        )
+        eng.generate(prompts, 24).block_until_ready()  # compile
         t0 = time.time()
         out = eng.generate(prompts, 24)
         out.block_until_ready()
@@ -39,17 +46,20 @@ def main():
         print(f"{name:26s}: {out.shape[0] * out.shape[1] / dt:7.1f} tok/s "
               f"first tokens {np.asarray(out)[0, :6]}")
 
-    # the hot matmul through the fused Pallas kernel (interpret mode on CPU)
+    # the hot matmul through the fused Pallas kernel (interpret mode on CPU):
+    # prefill-shaped (M = 8) takes the tiled matmul kernel, decode-shaped
+    # (M = 1 token) auto-dispatches to the unpadded fused matvec
     w = params["layers"]["ffn"]["wi"]["kernel"][0]
     sw = make_sonic_weight(w, sparsity=0.5, block=(16, 16), num_clusters=64)
-    x = jax.random.normal(jax.random.PRNGKey(2), (8, w.shape[0]))
-    y_kernel = sonic_matmul(x, sw, bm=8)
-    y_dense = x @ sw.dense(jnp.float32)
-    err = float(jnp.abs(y_kernel - y_dense).max())
+    for m, shape_name in [(8, "prefill (M=8)"), (1, "decode (M=1)")]:
+        x = jax.random.normal(jax.random.PRNGKey(2), (m, w.shape[0]))
+        y_kernel = sonic_matmul(x, sw, bm=8)
+        y_dense = x @ sw.dense(jnp.float32)
+        err = float(jnp.abs(y_kernel - y_dense).max())
+        print(f"\nsonic_matmul {shape_name}: max|Δ| vs densified = {err:.2e}")
     dense_bytes = w.size * 2
     sonic_bytes = sw.idx_values.size + sw.indices.size * 4 + sw.codebook.size * 4
-    print(f"\nsonic_matmul kernel: max|Δ| vs densified = {err:.2e}; "
-          f"weight bytes {dense_bytes} → {sonic_bytes} "
+    print(f"weight bytes {dense_bytes} → {sonic_bytes} "
           f"({dense_bytes / sonic_bytes:.1f}x less HBM traffic)")
 
 

@@ -10,6 +10,12 @@ Execution paths (selected per-layer by ``SonicExecutionConfig``):
                                                         (C1+C4 serving path)
   topk          activation-compressed matmul (static-k column gather)
                                                         (C3 serving path)
+  sonic         fused block-sparse structure × clustered int8 values — the
+                full C1+C2 co-design in one kernel.  Shape-dispatched inside
+                ``sonic_matmul``: flattened row counts below
+                ``kernels.sonic_matmul.DECODE_M_THRESHOLD`` take the
+                decode-shaped matvec kernel (no M padding), larger ones the
+                tiled matmul kernel.            (C1+C2 serving / decode path)
 
 Each path has a pure-jnp fallback (used on CPU and as the oracle); the Pallas
 kernels in ``repro.kernels`` are engaged with ``use_kernel=True``.
@@ -17,7 +23,7 @@ kernels in ``repro.kernels`` are engaged with ``use_kernel=True``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import Any, Literal
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +31,7 @@ import jax.numpy as jnp
 from repro.core.activation_sparsity import sparse_ffn_matmul
 from repro.core.clustering import ClusteredWeight
 
-Mode = Literal["dense", "masked", "clustered", "block_sparse", "topk"]
+Mode = Literal["dense", "masked", "clustered", "block_sparse", "topk", "sonic"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -108,9 +114,10 @@ class SonicLinearParams:
     w: jax.Array | None = None  # (K, N) dense or masked
     clustered: ClusteredWeight | None = None
     block_sparse: BlockSparseWeight | None = None
+    sonic: Any | None = None  # kernels.sonic_matmul.SonicWeight (fused C1+C2)
 
     def tree_flatten(self):
-        return (self.w, self.clustered, self.block_sparse), None
+        return (self.w, self.clustered, self.block_sparse, self.sonic), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -154,6 +161,24 @@ def sonic_linear_apply(
             return bs_ops.block_sparse_matmul(x, bs)
         return x @ bs.dense(x.dtype)
 
+    if mode == "sonic":
+        assert params.sonic is not None
+        sw = params.sonic
+        if config.use_kernel:
+            from repro.kernels.sonic_matmul import ops as sm_ops
+
+            # sonic_matmul itself dispatches decode shapes (flattened
+            # M < DECODE_M_THRESHOLD) to the unpadded matvec kernel
+            return sm_ops.sonic_matmul(x, sw)
+        from repro.kernels.sonic_matmul.ref import sonic_matmul_ref
+
+        lead = x.shape[:-1]
+        y = sonic_matmul_ref(
+            x.reshape(-1, x.shape[-1]), sw.idx_values, sw.codebook,
+            sw.indices, sw.k_blocks,
+        )
+        return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -169,4 +194,12 @@ def convert_linear(
     if config.mode == "block_sparse":
         bs = make_block_sparse(w, config.weight_sparsity, config.block)
         return SonicLinearParams(block_sparse=bs)
+    if config.mode == "sonic":
+        from repro.kernels.sonic_matmul.ops import make_sonic_weight
+
+        sw = make_sonic_weight(
+            w, sparsity=config.weight_sparsity, block=config.block,
+            num_clusters=config.num_clusters,
+        )
+        return SonicLinearParams(sonic=sw)
     return SonicLinearParams(w=w)

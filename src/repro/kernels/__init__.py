@@ -8,6 +8,10 @@ block_sparse_matmul  — C1+C4: balanced block-sparse weights; only nonzero
                        of VCSEL power gating, at tile granularity).
 sparse_matvec        — C3: the FC zero-compression dataflow; gathered weight
                        rows × dense compressed activations.
+sonic_matmul         — C1+C2 fused serving matmul, plus the decode-shaped
+                       matvec variant (no M-tiling) that ``sonic_matmul``
+                       auto-dispatches to when the flattened row count is
+                       below DECODE_M_THRESHOLD (the generation hot path).
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper; interpret=True on CPU), ref.py (pure-jnp oracle).

@@ -1,1 +1,7 @@
-from repro.kernels.sonic_matmul.ops import sonic_matmul, make_sonic_weight
+from repro.kernels.sonic_matmul.ops import (
+    DECODE_M_THRESHOLD,
+    SonicWeight,
+    make_sonic_weight,
+    sonic_matmul,
+    sonic_matvec,
+)

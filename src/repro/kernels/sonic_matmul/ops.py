@@ -9,9 +9,17 @@ import jax.numpy as jnp
 
 from repro.core.clustering import ClusteringConfig, cluster_weights
 from repro.core.sonic_layers import make_block_sparse
-from repro.kernels.sonic_matmul.kernel import sonic_matmul_pallas
+from repro.kernels.sonic_matmul.kernel import (
+    sonic_matmul_pallas,
+    sonic_matvec_pallas,
+)
 
 _ON_TPU = jax.default_backend() == "tpu"
+
+# Flattened row counts below this dispatch to the decode-shaped matvec kernel
+# (grid over (Nb, R) only) instead of padding up to an M-tile.  8 = the fp32
+# sublane tile — at M ≥ 8 the padded matmul wastes nothing.
+DECODE_M_THRESHOLD = 8
 
 
 @jax.tree_util.register_pytree_node_class
@@ -71,10 +79,21 @@ def make_sonic_weight(
 
 @functools.partial(jax.jit, static_argnames=("bm",))
 def sonic_matmul(x: jax.Array, w: SonicWeight, *, bm: int = 256) -> jax.Array:
+    """x (..., K) @ SONIC weight → (..., N).
+
+    Shape-dispatched: flattened row counts < ``DECODE_M_THRESHOLD`` (the
+    decode hot path — M = batch × 1 token) take the matvec kernel, which
+    never pads M; larger M takes the tiled matmul kernel.
+    """
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
+    if m < DECODE_M_THRESHOLD:
+        y = sonic_matvec_pallas(
+            x2, w.idx_values, w.codebook, w.indices, interpret=not _ON_TPU
+        )
+        return y.reshape(*lead, w.dense_shape[1]).astype(x.dtype)
     bm_eff = min(bm, max(8, m))
     pad_m = (-m) % bm_eff
     if pad_m:
@@ -85,3 +104,15 @@ def sonic_matmul(x: jax.Array, w: SonicWeight, *, bm: int = 256) -> jax.Array:
     if pad_m:
         y = y[:m]
     return y.reshape(*lead, w.dense_shape[1]).astype(x.dtype)
+
+
+@jax.jit
+def sonic_matvec(x: jax.Array, w: SonicWeight) -> jax.Array:
+    """Decode-shaped entry point: x (K,) or (B, K) → (N,) / (B, N), always
+    through the no-padding matvec kernel regardless of B."""
+    squeeze = x.ndim == 1
+    x2 = x[None] if squeeze else x
+    y = sonic_matvec_pallas(
+        x2, w.idx_values, w.codebook, w.indices, interpret=not _ON_TPU
+    ).astype(x.dtype)
+    return y[0] if squeeze else y

@@ -21,3 +21,16 @@ def sonic_matmul_ref(
     return jnp.dot(
         x.astype(jnp.float32), w, preferred_element_type=jnp.float32
     ).astype(x.dtype)
+
+
+def sonic_matvec_ref(
+    x: jax.Array,  # (K,) or (B, K) decode activations
+    idx_values: jax.Array,
+    codebook: jax.Array,
+    indices: jax.Array,
+    k_blocks: int,
+) -> jax.Array:
+    """Oracle for the decode-shaped matvec — same math, decode shapes."""
+    x2 = x[None] if x.ndim == 1 else x
+    y = sonic_matmul_ref(x2, idx_values, codebook, indices, k_blocks)
+    return y[0] if x.ndim == 1 else y

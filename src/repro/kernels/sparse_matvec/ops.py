@@ -14,24 +14,26 @@ _ON_TPU = jax.default_backend() == "tpu"
 
 @functools.partial(jax.jit, static_argnames=("bn",))
 def sparse_matvec(
-    x_nz: jax.Array,  # (B, knz) or (knz,)
+    x_nz: jax.Array,  # (..., knz): (knz,), (B, knz), or decode (B, 1, knz)
     idx: jax.Array,  # (knz,) int32
     wt: jax.Array,  # (K, N)
     *,
     bn: int = 512,
 ) -> jax.Array:
+    """Leading dims are flattened into the kernel's row axis — decode-shaped
+    (B, 1, knz) activations run unpadded, one kernel row per sequence."""
     squeeze = x_nz.ndim == 1
-    if squeeze:
-        x_nz = x_nz[None]
-    y = sparse_matvec_pallas(x_nz, idx.astype(jnp.int32), wt, bn=bn,
+    lead = x_nz.shape[:-1]
+    x2 = x_nz.reshape(-1, x_nz.shape[-1]) if x_nz.ndim != 2 else x_nz
+    y = sparse_matvec_pallas(x2, idx.astype(jnp.int32), wt, bn=bn,
                              interpret=not _ON_TPU)
     y = y.astype(x_nz.dtype)
-    return y[0] if squeeze else y
+    return y[0] if squeeze else y.reshape(*lead, wt.shape[1])
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bn"))
 def topk_sparse_matmul(
-    x: jax.Array,  # (B, K) activations (possibly sparse)
+    x: jax.Array,  # (..., K) activations (possibly sparse)
     wt: jax.Array,  # (K, N)
     k: int,
     *,
@@ -39,8 +41,10 @@ def topk_sparse_matmul(
 ) -> jax.Array:
     """Fused: shared top-k compression (batch-union magnitude) + compressed
     product.  Equals x @ wt exactly when x has ≤ k nonzero columns."""
-    scores = jnp.abs(x.astype(jnp.float32)).sum(0)
-    _, idx = jax.lax.top_k(scores, min(k, x.shape[1]))
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    scores = jnp.abs(x2.astype(jnp.float32)).sum(0)
+    _, idx = jax.lax.top_k(scores, min(k, x2.shape[1]))
     idx = jnp.sort(idx)  # ascending → quasi-sequential HBM stripes
-    x_nz = jnp.take(x, idx, axis=1)
-    return sparse_matvec(x_nz, idx, wt, bn=bn)
+    x_nz = jnp.take(x2, idx, axis=1)
+    return sparse_matvec(x_nz, idx, wt, bn=bn).reshape(*lead, wt.shape[1])

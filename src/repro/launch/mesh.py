@@ -10,20 +10,24 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    # jax ≥ 0.4.38 takes axis_types; older releases (the baked-in 0.4.37
+    # toolchain) have neither AxisType nor the kwarg — Auto is the default.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16, 16) = 256 chips, axes (data, model).
     Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for CPU-sharded integration tests (8 host devices)."""
-    return jax.make_mesh(
-        (n_data, n_model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _mesh((n_data, n_model), ("data", "model"))

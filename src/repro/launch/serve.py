@@ -29,6 +29,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--loop", default="scan", choices=("scan", "while", "python"),
+                    help="decode loop: compiled scan (default), compiled "
+                         "while_loop with eos early-exit, or legacy host loop")
+    ap.add_argument("--eos-token", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -40,6 +44,8 @@ def main() -> None:
     sc = ServeConfig(
         max_len=args.prompt_len + args.new_tokens + 1,
         temperature=args.temperature,
+        loop=args.loop,
+        eos_token=args.eos_token,
     )
     eng = ServeEngine(arch, params, plan, sc)
     key = jax.random.PRNGKey(args.seed + 1)

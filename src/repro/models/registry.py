@@ -142,6 +142,52 @@ def input_specs(
     return specs
 
 
+def check_decode_cache_carry(
+    arch: Arch,
+    batch: int = 2,
+    max_len: int = 8,
+    plan: MeshPlan | None = None,
+    cfg: ModelConfig | None = None,
+) -> None:
+    """Assert the scan-carry contract the compiled serving loop relies on:
+    one decode step must map the cache pytree to an *identical* pytree
+    (same treedef, shapes, dtypes).  Pure ``eval_shape`` — allocates nothing.
+
+    Raises AssertionError with the offending leaf paths on violation.
+    """
+    plan = plan or MeshPlan()
+    cfg = cfg or arch.cfg
+    params = arch.abstract_params(cfg)
+    cache = arch.abstract_cache(batch, max_len, plan, cfg)
+    if arch.input_kind == "tokens":
+        tok = SDS((batch, 1), jnp.int32)
+        kw = {"tokens": tok}
+    else:
+        kw = {"embeds": SDS((batch, 1, cfg.d_model), jnp.bfloat16)}
+        if arch.input_kind == "embeds+mrope":
+            kw["positions"] = SDS((batch, 3, 1), jnp.int32)
+    pos = SDS((batch,), jnp.int32)
+
+    def step(params, cache, pos, kw):
+        _, new_cache = arch.forward(
+            params, plan, cfg=cfg, cache=cache, cache_pos=pos, **kw
+        )
+        return new_cache
+
+    out = jax.eval_shape(step, params, cache, pos, kw)
+    in_leaves, in_tree = jax.tree_util.tree_flatten(cache)
+    out_leaves, out_tree = jax.tree_util.tree_flatten(out)
+    assert in_tree == out_tree, (
+        f"{arch.arch_id}: decode changed the cache treedef\n{in_tree}\n{out_tree}"
+    )
+    bad = [
+        (i, a.shape, a.dtype, b.shape, b.dtype)
+        for i, (a, b) in enumerate(zip(in_leaves, out_leaves))
+        if a.shape != b.shape or a.dtype != b.dtype
+    ]
+    assert not bad, f"{arch.arch_id}: decode changed cache leaf specs: {bad}"
+
+
 def cache_shardings(arch: Arch, cache_abs, plan: MeshPlan, cfg: ModelConfig):
     """Attach NamedShardings to an abstract cache pytree."""
     if plan.mesh is None:

@@ -209,6 +209,11 @@ def forward(
 def init_cache(
     cfg: ModelConfig, batch: int, max_len: int, plan: MeshPlan, dtype=jnp.bfloat16
 ) -> dict:
+    """Contract (all model families): the cache is a pytree of arrays with
+    static shapes, and one decode step maps it to an identical pytree —
+    it must be carry-able through ``lax.scan`` / donate-able into the
+    compiled serving loop (checked by ``registry.check_decode_cache_carry``).
+    """
     kh_eff = cfg.n_kv_heads * (plan.kv_repeat if plan else 1)
     shape = (cfg.n_layers, batch, max_len, kh_eff, cfg.head_dim)
     if plan is not None and plan.cache_quant_int8:

@@ -1,11 +1,37 @@
-"""Batched serving engine: prefill once, decode in steps, per-sequence
-stopping, optional SONIC-compressed weights.
+"""Batched serving engine: fully-compiled generation with per-sequence
+stopping and SONIC-compressed weights.
 
-The engine owns two compiled programs (prefill_step, decode_step) built from
-the arch registry; the dry-run lowers the same programs.  Serving the SONIC
-way: ``convert_params`` rewrites eligible linear weights into the clustered /
-block-sparse serving formats of ``repro.core.sonic_layers`` (CPU smoke path
-uses the jnp fallbacks; on TPU the Pallas kernels engage).
+Execution paths (``ServeConfig.loop``):
+
+  "scan"    (default) prefill→decode as TWO compiled programs total:
+            one jitted prefill+first-sample, and one jitted ``lax.scan``
+            that carries ``(cache, tok, pos, done, key)`` on-device for all
+            remaining steps.  Zero host transfers between decode steps; the
+            KV cache is **donated** into the loop program (``donate_argnums``)
+            so XLA aliases the prefill-built buffers instead of copying the
+            full cache at loop entry.
+  "while"   same two-program structure but the loop is a ``lax.while_loop``
+            that exits as soon as every sequence has emitted ``eos_token``
+            (untaken steps come back pinned to ``eos_token``).  Output-
+            equivalent to "scan"; pays a dynamic trip count for the early
+            exit.
+  "python"  the legacy host loop (one jitted decode step per token,
+            host-side sampling / key splits).  Kept as the baseline the
+            ``serve_decode`` benchmark and the equivalence tests compare
+            against.
+
+Decode kernel dispatch: when serving SONIC-converted weights
+(``core.sonic_layers`` mode "sonic"), ``sonic_matmul`` routes activations
+whose flattened row count is below ``DECODE_M_THRESHOLD`` (= 8, the fp32
+sublane tile — see ``kernels/sonic_matmul/ops.py``) to the decode-shaped
+fused matvec kernel: grid over (N-blocks, kept-K-blocks) only, no M-tiling
+and no pad-to-8 of the single decode row, so per-token weight traffic stays
+∝ (1 − sparsity)/2 instead of being washed out by padding FLOPs.
+
+Semantics (identical across all three paths, greedy outputs bit-identical):
+the first token is sampled from the prefill logits and is never eos-pinned;
+every subsequent token is eos-checked, and once a sequence has emitted
+``eos_token`` all its later tokens are pinned to ``eos_token``.
 """
 from __future__ import annotations
 
@@ -27,31 +53,112 @@ class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
     eos_token: int = -1  # -1 ⇒ never stop early
     jit: bool = True
+    loop: str = "scan"  # "scan" | "while" | "python"
 
 
 class ServeEngine:
     def __init__(self, arch, params, plan: MeshPlan, sc: ServeConfig, cfg=None):
+        assert sc.loop in ("scan", "while", "python"), sc.loop
         self.arch, self.params, self.plan, self.sc = arch, params, plan, sc
         self.cfg = cfg or arch.cfg
+        # traced / called counters: tests assert no-recompile and
+        # one-program-per-loop from these.
+        self.trace_counts: dict[str, int] = {"prefill": 0, "decode": 0,
+                                             "decode_loop": 0}
+        self.call_counts: dict[str, int] = {"prefill": 0, "decode": 0,
+                                            "decode_loop": 0}
 
-        def prefill(params, tokens):
-            cache = arch.init_cache(tokens.shape[0], sc.max_len, plan, cfg=self.cfg)
+        def sample(logits, key):
+            return sample_token(logits, key, sc.temperature, sc.top_k, sc.top_p)
+
+        def prefill(params, tokens, key):
+            self.trace_counts["prefill"] += 1
+            b = tokens.shape[0]
+            cache = arch.init_cache(b, sc.max_len, plan, cfg=self.cfg)
             logits, cache = arch.forward(
                 params, plan, cfg=self.cfg, tokens=tokens, cache=cache
             )
-            return logits, cache
+            tok = sample(logits[:, -1], key)
+            pos = jnp.full((b,), tokens.shape[1], jnp.int32)
+            done = jnp.zeros((b,), bool)
+            return tok, cache, pos, done
 
         def decode(params, cache, token, pos):
+            self.trace_counts["decode"] += 1
             logits, cache = arch.forward(
                 params, plan, cfg=self.cfg, tokens=token,
                 cache=cache, cache_pos=pos,
             )
             return logits[:, 0], cache
 
-        self._prefill = jax.jit(prefill) if sc.jit else prefill
-        self._decode = jax.jit(decode) if sc.jit else decode
+        def step(params, cache, tok, pos, done, key):
+            """One on-device decode step (shared by scan and while bodies)."""
+            key, sub = jax.random.split(key)
+            logits, cache = arch.forward(
+                params, plan, cfg=self.cfg, tokens=tok[:, None],
+                cache=cache, cache_pos=pos,
+            )
+            nxt = sample(logits[:, 0], sub)
+            if sc.eos_token >= 0:
+                done = done | (nxt == sc.eos_token)
+                nxt = jnp.where(done, sc.eos_token, nxt)
+            return cache, nxt, pos + 1, done, key
+
+        def decode_loop(n_steps, params, cache, tok, pos, done, key):
+            self.trace_counts["decode_loop"] += 1
+
+            def body(carry, _):
+                cache, tok, pos, done, key = carry
+                cache, nxt, pos, done, key = step(params, cache, tok, pos,
+                                                  done, key)
+                return (cache, nxt, pos, done, key), nxt
+
+            carry, toks = jax.lax.scan(
+                body, (cache, tok, pos, done, key), length=n_steps
+            )
+            return toks.T, carry[0]  # (B, n_steps), final cache
+
+        def decode_loop_while(n_steps, params, cache, tok, pos, done, key):
+            self.trace_counts["decode_loop"] += 1
+            b = tok.shape[0]
+            fill = sc.eos_token if sc.eos_token >= 0 else 0
+            out0 = jnp.full((b, n_steps), fill, jnp.int32)
+
+            def cond(st):
+                i, *_, done, _key, _out = st
+                return (i < n_steps) & ~jnp.all(done)
+
+            def body(st):
+                i, cache, tok, pos, done, key, out = st
+                cache, nxt, pos, done, key = step(params, cache, tok, pos,
+                                                  done, key)
+                out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
+                return i + 1, cache, nxt, pos, done, key, out
+
+            st = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), cache, tok, pos, done, key, out0)
+            )
+            return st[6], st[1]
+
+        if sc.jit:
+            self._prefill = jax.jit(prefill)
+            self._decode = jax.jit(decode)
+            # n_steps static (scan length / trip bound); cache (arg 2) donated
+            # so the loop aliases the prefill buffers instead of copying them.
+            loop_fn = decode_loop if sc.loop != "while" else decode_loop_while
+            self._decode_loop = jax.jit(
+                loop_fn, static_argnums=(0,), donate_argnums=(2,)
+            )
+        else:
+            self._prefill, self._decode = prefill, decode
+            self._decode_loop = (
+                decode_loop if sc.loop != "while" else decode_loop_while
+            )
+
+    # ------------------------------------------------------------- public
 
     def generate(
         self, prompts: jax.Array, n_new: int, key: jax.Array | None = None
@@ -61,15 +168,33 @@ class ServeEngine:
         b, s_prompt = prompts.shape
         assert s_prompt + n_new <= sc.max_len, "exceeds cache"
         key = key if key is not None else jax.random.PRNGKey(0)
-        logits, cache = self._prefill(self.params, prompts)
-        tok = sample_token(logits[:, -1], key, sc.temperature, sc.top_k)
+        if sc.loop == "python":
+            return self._generate_python(prompts, n_new, key)
+        tok, cache, pos, done = self._prefill(self.params, prompts, key)
+        self.call_counts["prefill"] += 1
+        if n_new == 1:
+            return tok[:, None]
+        toks, _ = self._decode_loop(
+            n_new - 1, self.params, cache, tok, pos, done, key
+        )
+        self.call_counts["decode_loop"] += 1
+        return jnp.concatenate([tok[:, None], toks], axis=1)
+
+    # ------------------------------------------------- legacy python loop
+
+    def _generate_python(
+        self, prompts: jax.Array, n_new: int, key: jax.Array
+    ) -> jax.Array:
+        """Seed-identical host loop: one device round-trip per token."""
+        sc = self.sc
+        tok, cache, pos, done = self._prefill(self.params, prompts, key)
+        self.call_counts["prefill"] += 1
         out = [tok]
-        done = jnp.zeros((b,), bool)
-        pos = jnp.full((b,), s_prompt, jnp.int32)
-        for i in range(n_new - 1):
+        for _ in range(n_new - 1):
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, cache, tok[:, None], pos)
-            tok = sample_token(logits, sub, sc.temperature, sc.top_k)
+            self.call_counts["decode"] += 1
+            tok = sample_token(logits, sub, sc.temperature, sc.top_k, sc.top_p)
             if sc.eos_token >= 0:
                 done = done | (tok == sc.eos_token)
                 tok = jnp.where(done, sc.eos_token, tok)

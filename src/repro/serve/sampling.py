@@ -1,4 +1,9 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+
+Every path is pure jnp with static-shape control flow only, so the sampler
+can live *inside* the compiled decode loop (``lax.scan`` body in
+``repro.serve.engine``) — no host round-trip per sampled token.
+"""
 from __future__ import annotations
 
 import jax
@@ -10,6 +15,7 @@ def sample_token(
     key: jax.Array,
     temperature: float = 0.0,
     top_k: int = 0,
+    top_p: float = 1.0,
 ) -> jax.Array:
     """→ (B,) int32 next tokens."""
     if temperature <= 0.0:
@@ -18,4 +24,12 @@ def sample_token(
     if top_k > 0:
         kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
         lf = jnp.where(lf < kth, -jnp.inf, lf)
+    if 0.0 < top_p < 1.0:
+        # nucleus: keep the smallest logit-sorted prefix with mass ≥ top_p
+        srt = jnp.sort(lf, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        exclusive_mass = jnp.cumsum(probs, axis=-1) - probs
+        kept = exclusive_mass < top_p  # first column always kept
+        thresh = jnp.min(jnp.where(kept, srt, jnp.inf), axis=-1, keepdims=True)
+        lf = jnp.where(lf < thresh, -jnp.inf, lf)
     return jax.random.categorical(key, lf).astype(jnp.int32)

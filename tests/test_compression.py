@@ -7,6 +7,12 @@ fp32.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.activation_sparsity import topk_activation_mask, topk_compress

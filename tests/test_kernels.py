@@ -11,8 +11,10 @@ from repro.kernels.block_sparse_matmul.ops import block_sparse_matmul
 from repro.kernels.block_sparse_matmul.ref import block_sparse_matmul_ref
 from repro.kernels.clustered_matmul.ops import clustered_matmul
 from repro.kernels.clustered_matmul.ref import clustered_matmul_ref
-from repro.kernels.sonic_matmul.ops import make_sonic_weight, sonic_matmul
-from repro.kernels.sonic_matmul.ref import sonic_matmul_ref
+from repro.kernels.sonic_matmul.ops import (
+    DECODE_M_THRESHOLD, make_sonic_weight, sonic_matmul, sonic_matvec,
+)
+from repro.kernels.sonic_matmul.ref import sonic_matmul_ref, sonic_matvec_ref
 from repro.kernels.sparse_matvec.ops import sparse_matvec, topk_sparse_matmul
 from repro.kernels.sparse_matvec.ref import sparse_matvec_ref
 
@@ -82,6 +84,69 @@ def test_sonic_matmul_fused(sp, c):
     got = sonic_matmul(x, sw, bm=8)
     want = sonic_matmul_ref(x, sw.idx_values, sw.codebook, sw.indices, sw.k_blocks)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 7])
+def test_sonic_matmul_decode_dispatch(m):
+    """Flattened M below the tile threshold routes through the unpadded
+    matvec kernel and stays exact."""
+    assert m < DECODE_M_THRESHOLD
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 128))
+    sw = make_sonic_weight(w, sparsity=0.5, block=(64, 64), num_clusters=32)
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, 256))
+    got = sonic_matmul(x, sw)
+    want = sonic_matmul_ref(x, sw.idx_values, sw.codebook, sw.indices, sw.k_blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sonic_matvec_shapes():
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    sw = make_sonic_weight(w, sparsity=0.25, block=(32, 32), num_clusters=16)
+    for shape in [(128,), (3, 128)]:
+        x = jax.random.normal(jax.random.PRNGKey(1), shape)
+        got = sonic_matvec(x, sw)
+        want = sonic_matvec_ref(x, sw.idx_values, sw.codebook, sw.indices,
+                                sw.k_blocks)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_sparse_matvec_decode_leading_dims():
+    """(B, 1, knz) decode activations flatten into kernel rows unpadded."""
+    wt = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+    idx = jnp.sort(
+        jax.random.permutation(jax.random.PRNGKey(2), 128)[:32]
+    ).astype(jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 1, 32))
+    got = sparse_matvec(x, idx, wt)
+    want = sparse_matvec_ref(x.reshape(3, 32), idx, wt).reshape(3, 1, 256)
+    assert got.shape == (3, 1, 256)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sonic_mode_linear_apply_kernel_vs_fallback():
+    """The 'sonic' execution path: Pallas kernel ≡ jnp fallback, decode and
+    prefill shapes."""
+    from repro.core.sonic_layers import (
+        SonicExecutionConfig, convert_linear, sonic_linear_apply,
+    )
+    import dataclasses
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    kcfg = SonicExecutionConfig(mode="sonic", use_kernel=True,
+                                weight_sparsity=0.5, block=(32, 32))
+    fcfg = dataclasses.replace(kcfg, use_kernel=False)
+    p = convert_linear(w, kcfg)
+    for shape in [(2, 1, 128), (4, 16, 128)]:
+        x = jax.random.normal(jax.random.PRNGKey(2), shape)
+        got = sonic_linear_apply(p, x, kcfg)
+        want = sonic_linear_apply(p, x, fcfg)
+        assert got.shape == want.shape == (*shape[:-1], 128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_sonic_weight_bytes_shrink():

@@ -20,8 +20,7 @@ def test_pipeline_matches_sequential():
         from repro.sharding.pipeline import pipeline_apply
 
         S, M, MB, D = 4, 6, 2, 16
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         key = jax.random.PRNGKey(0)
         ws = jax.random.normal(key, (S, D, D)) * 0.3
         x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))

@@ -1,0 +1,146 @@
+"""Compiled serving loop: equivalence, eos semantics, no-recompile, and the
+scan-carry cache contract (ISSUE 1 acceptance tests)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import check_decode_cache_carry, get_arch
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sampling import sample_token
+from repro.sharding.mesh import MeshPlan
+
+PLAN = MeshPlan()
+
+
+@pytest.fixture(scope="module")
+def arch_params():
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    return arch, params
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return jax.random.randint(
+        jax.random.PRNGKey(1), (3, 8), 0, 256
+    ).astype(jnp.int32)
+
+
+def _engine(arch_params, **kw):
+    arch, params = arch_params
+    return ServeEngine(arch, params, PLAN, ServeConfig(max_len=64, **kw))
+
+
+# ------------------------------------------------- compiled ≡ python loop
+
+
+def test_compiled_loops_match_python_greedy(arch_params, prompts):
+    """Greedy outputs of scan and while loops are bit-identical to the
+    legacy per-token python loop (the seed engine semantics)."""
+    want = np.asarray(_engine(arch_params, loop="python").generate(prompts, 10))
+    for loop in ("scan", "while"):
+        got = np.asarray(_engine(arch_params, loop=loop).generate(prompts, 10))
+        np.testing.assert_array_equal(got, want, err_msg=loop)
+
+
+def test_compiled_loop_matches_python_sampled(arch_params, prompts):
+    """Same on-device key-split sequence ⇒ identical stochastic samples."""
+    key = jax.random.PRNGKey(7)
+    kw = dict(temperature=0.8, top_k=8)
+    want = np.asarray(
+        _engine(arch_params, loop="python", **kw).generate(prompts, 8, key)
+    )
+    got = np.asarray(
+        _engine(arch_params, loop="scan", **kw).generate(prompts, 8, key)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------- eos semantics
+
+
+def test_eos_pins_all_later_tokens(arch_params, prompts):
+    base = np.asarray(_engine(arch_params).generate(prompts, 12))
+    eos = int(base[0, 4])  # a token greedy decoding actually emits
+    for loop in ("scan", "while", "python"):
+        out = np.asarray(
+            _engine(arch_params, loop=loop, eos_token=eos).generate(prompts, 12)
+        )
+        hit = False
+        for row in out:
+            idx = np.where(row[1:] == eos)[0]  # first token is never pinned
+            if idx.size:
+                hit = True
+                assert (row[1 + idx[0]:] == eos).all(), (loop, row)
+        assert hit, f"{loop}: eos never emitted — test is vacuous"
+
+
+def test_while_loop_early_exit_matches_scan(arch_params, prompts):
+    base = np.asarray(_engine(arch_params).generate(prompts, 12))
+    eos = int(base[0, 4])
+    a = _engine(arch_params, loop="scan", eos_token=eos).generate(prompts, 12)
+    b = _engine(arch_params, loop="while", eos_token=eos).generate(prompts, 12)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------- compiled-program structure
+
+
+def test_single_program_decode_no_retrace(arch_params, prompts):
+    """The whole decode loop is ONE compiled program, launched once per
+    generate, with no retrace across same-shape calls."""
+    eng = _engine(arch_params)
+    a = eng.generate(prompts, 10)
+    b = eng.generate(prompts, 10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # one device-program launch per generate — not one per token
+    assert eng.call_counts["decode_loop"] == 2
+    assert eng.call_counts["decode"] == 0
+    # traced exactly once; jit cache holds a single entry
+    assert eng.trace_counts["decode_loop"] == 1
+    assert eng.trace_counts["prefill"] == 1
+    assert eng._decode_loop._cache_size() == 1
+    assert eng._prefill._cache_size() == 1
+
+
+def test_decode_loop_is_on_device_loop(arch_params, prompts):
+    """Jaxpr-level check: all decode steps live inside a single lax loop
+    primitive — zero host transfers between steps."""
+    arch, params = arch_params
+    eng = _engine(arch_params)
+    tok, cache, pos, done = eng._prefill(params, prompts, jax.random.PRNGKey(0))
+    jaxpr = jax.make_jaxpr(
+        functools.partial(eng._decode_loop, 5), static_argnums=()
+    )(params, cache, tok, pos, done, jax.random.PRNGKey(0))
+    assert "scan" in str(jaxpr) or "while" in str(jaxpr)
+
+
+# ------------------------------------------------------- cache contract
+
+
+@pytest.mark.parametrize("arch_id", ["tinyllama-1.1b", "zamba2-7b", "rwkv6-3b"])
+def test_decode_cache_is_scan_carryable(arch_id):
+    """Every serving family upholds the cache pytree contract the compiled
+    loop scans over (same treedef/shapes/dtypes across a decode step)."""
+    check_decode_cache_carry(get_arch(arch_id, reduced=True))
+
+
+# ------------------------------------------------------------- sampling
+
+
+def test_top_p_restricts_support():
+    # one dominant token (p≈0.94) — nucleus 0.5 keeps only it
+    logits = jnp.array([[4.0, 1.0, 0.5, -1.0]])
+    toks = sample_token(
+        jnp.tile(logits, (64, 1)), jax.random.PRNGKey(0),
+        temperature=1.0, top_p=0.5,
+    )
+    assert set(np.asarray(toks).tolist()) == {0}
+    # top_p=1.0 leaves the distribution untouched
+    toks = sample_token(
+        jnp.tile(logits, (256, 1)), jax.random.PRNGKey(1), temperature=1.0
+    )
+    assert len(set(np.asarray(toks).tolist())) > 1
