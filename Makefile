@@ -2,15 +2,24 @@
 
 PY ?= python
 
-.PHONY: test bench-smoke bench ci
+.PHONY: test lint bench-smoke bench perf-gate ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
+lint:
+	ruff check .
+
 bench-smoke:
-	BENCH_REPEATS=1 PYTHONPATH=src $(PY) benchmarks/run.py --only kernel_traffic,serve_decode
+	BENCH_REPEATS=1 PYTHONPATH=src $(PY) benchmarks/run.py --only kernel_traffic,serve_decode,serve_continuous
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py
+
+# regenerate the serving benches and compare against the committed baseline
+perf-gate:
+	cp BENCH_serve.json /tmp/BENCH_serve_baseline.json
+	BENCH_REPEATS=2 PYTHONPATH=src $(PY) benchmarks/run.py --only serve_decode,serve_continuous
+	$(PY) benchmarks/perf_gate.py --baseline /tmp/BENCH_serve_baseline.json --new BENCH_serve.json
 
 ci: test bench-smoke

@@ -7,10 +7,13 @@ compile time), then the median of ``BENCH_REPEATS`` timed repeats (default 3,
 env-overridable), each fenced with ``jax.block_until_ready``.  Repeat calls
 run with stdout suppressed so tables print once.
 
-``serve_decode`` additionally writes machine-readable ``BENCH_serve.json``
-(prefill/decode tokens-per-second for the compiled vs python-loop serving
-engines, per batch size) so the serving-perf trajectory is tracked across
-PRs.  Select a subset with ``--only name1,name2``.
+``serve_decode`` and ``serve_continuous`` additionally record into
+machine-readable ``BENCH_serve.json`` (each under its own section —
+compiled-vs-python decode tok/s per batch size, and continuous-vs-static
+aggregate tok/s + p50/p95 request latency) so the serving-perf trajectory is
+tracked across PRs; CI's perf gate (``benchmarks/perf_gate.py``) compares a
+fresh run of both against the committed copy.  Select a subset with
+``--only name1,name2``.
 
   table1_table3   — CNN zoo: our vs paper parameter counts; sparsify+cluster
                     accuracy retention on the MNIST teacher task   (§V.A)
@@ -265,6 +268,27 @@ def kernel_traffic():
 # ------------------------------------------------------------ serve decode
 
 
+def _merge_bench_json(section: str, payload: dict) -> str:
+    """Merge one bench's payload under its section key in BENCH_serve.json
+    (env BENCH_SERVE_JSON), preserving the other sections — serve_decode and
+    serve_continuous both record here and either can run alone via --only."""
+    path = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+    data: dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            try:
+                data = json.load(f)
+            except ValueError:
+                data = {}
+    if "batch" in data and "serve_decode" not in data:
+        data = {"serve_decode": data}  # migrate the PR 1 flat layout
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"wrote {path} [{section}]")
+    return path
+
+
 def serve_decode():
     """Compiled-loop vs python-loop serving engine: prefill + decode tok/s
     per batch size, written to BENCH_serve.json (env BENCH_SERVE_JSON)."""
@@ -331,11 +355,114 @@ def serve_decode():
               f"{row['decode_tok_s_python']:12.1f} "
               f"{row['decode_speedup']:6.1f}x")
 
-    path = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
-    print(f"wrote {path}")
+    _merge_bench_json("serve_decode", out)
     out["min_speedup"] = min(r["decode_speedup"] for r in out["batch"].values())
+    return out
+
+
+# -------------------------------------------------------- serve continuous
+
+
+def serve_continuous():
+    """Continuous batching (slot scheduler) vs static batching on a mixed
+    prompt/output-length workload: aggregate tok/s + p50/p95 request latency,
+    recorded under "serve_continuous" in BENCH_serve.json.
+
+    The static baseline is the PR 1 engine doing what static batching must
+    do: pad every prompt to the longest and run each batch of ``n_slots``
+    until its slowest request finishes.  The continuous path prefills each
+    request at its own length and refills freed slots between segments.
+    """
+    from repro.models.registry import get_arch
+    from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine
+    from repro.sharding.mesh import MeshPlan
+
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    plan = MeshPlan()
+    # heavy-tailed output lengths (the realistic serving regime): static
+    # batching runs every batch to its slowest member, continuous batching
+    # retires early finishers and refills their slots mid-flight
+    n_slots, seg_len, max_len = 4, 16, 192
+    lens = [4, 16, 8, 12, 4, 16, 6, 10, 14, 8, 4, 12]
+    news = [144, 8, 16, 4, 120, 12, 4, 144, 8, 4, 16, 108]
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, arch.cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    useful = sum(news)
+    sc = ServeConfig(max_len=max_len, temperature=0.0)
+    eng_c = ServeEngine(arch, params, plan, sc)
+    eng_s = ServeEngine(arch, params, plan, sc)
+
+    def run_continuous():
+        t0 = time.perf_counter()
+        sched = ContinuousScheduler(eng_c, n_slots=n_slots,
+                                    segment_len=seg_len, segment_mode="while")
+        handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+        sched.run()
+        total = time.perf_counter() - t0
+        return total, [h.latency for h in handles], sched.stats
+
+    pmax = max(lens)
+    padded = np.zeros((len(prompts), pmax), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p  # dead padded rows — the static-batching tax
+
+    def run_static():
+        t0 = time.perf_counter()
+        lat = []
+        for lo in range(0, len(prompts), n_slots):
+            hi = min(lo + n_slots, len(prompts))
+            n_new = max(news[lo:hi])  # batch runs until its slowest request
+            out = eng_s.generate(jnp.asarray(padded[lo:hi]), n_new)
+            _block(out)
+            lat += [time.perf_counter() - t0] * (hi - lo)
+        return time.perf_counter() - t0, lat
+
+    run_continuous()  # warmup: compiles slot programs (per prompt length)
+    run_static()  # warmup: compiles per (batch, n_new) loop programs
+    # interleave the timed reps so both modes sample the same box state —
+    # back-to-back phases skew the speedup by whatever the CPU was doing
+    # during one phase (observed ±0.3x on a 2-core runner)
+    reps = max(BENCH_REPEATS, 3)
+    cont_runs, stat_runs = [], []
+    for _ in range(reps):
+        cont_runs.append(run_continuous())
+        stat_runs.append(run_static())
+    ct, cl, cstats = min(cont_runs, key=lambda r: r[0])
+    st, sl = min(stat_runs, key=lambda r: r[0])
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs), q))
+
+    out = {
+        "arch": "tinyllama-1.1b (reduced)",
+        "workload": {"n_requests": len(prompts), "prompt_lens": lens,
+                     "new_tokens": news, "n_slots": n_slots,
+                     "segment_len": seg_len, "segment_mode": "while"},
+        "continuous": {
+            "tok_s": useful / ct,
+            "p50_latency_s": pct(cl, 50),
+            "p95_latency_s": pct(cl, 95),
+            "slot_steps_live": cstats["slot_steps_live"],
+            "slot_steps_masked": cstats["slot_steps_masked"],
+        },
+        "static": {
+            "tok_s": useful / st,
+            "p50_latency_s": pct(sl, 50),
+            "p95_latency_s": pct(sl, 95),
+        },
+    }
+    out["speedup_tok_s"] = out["continuous"]["tok_s"] / out["static"]["tok_s"]
+    print("\n== serve_continuous: slot scheduler vs static batching ==")
+    print(f"{'mode':>11s} {'tok/s':>9s} {'p50 lat':>9s} {'p95 lat':>9s}")
+    for mode in ("continuous", "static"):
+        r = out[mode]
+        print(f"{mode:>11s} {r['tok_s']:9.1f} {r['p50_latency_s']:9.3f} "
+              f"{r['p95_latency_s']:9.3f}")
+    print(f"aggregate speedup: {out['speedup_tok_s']:.2f}x  (live slot-steps "
+          f"{cstats['slot_steps_live']}, masked {cstats['slot_steps_masked']})")
+    _merge_bench_json("serve_continuous", out)
     return out
 
 
@@ -381,9 +508,11 @@ def main() -> None:
         ("kernel_traffic", kernel_traffic, lambda o: f"sonic={o['sonic_x']:.1f}x"),
         ("serve_decode", serve_decode,
          lambda o: f"decode_speedup={o['min_speedup']:.1f}x"),
+        ("serve_continuous", serve_continuous,
+         lambda o: f"speedup={o['speedup_tok_s']:.2f}x"),
         ("roofline_table", roofline_table, lambda o: f"cells={o.get('cells', 0)}"),
     ]
-    self_timed = {"serve_decode"}
+    self_timed = {"serve_decode", "serve_continuous"}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench names (default: all)")

@@ -19,7 +19,7 @@ from repro.photonic.baselines import evaluate_all
 from repro.photonic.mapper import lm_workload
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.sharding.mesh import MeshPlan
-from repro.utils.tree import named_leaves, tree_param_count
+from repro.utils.tree import tree_param_count
 
 
 def main():

@@ -1,8 +1,20 @@
 """Serving launcher: batched generation through the SONIC serving engine.
 
+Two workloads:
+
+  batch    (default) one fixed-shape batch through ``ServeEngine.generate``
+           — the PR 1 static path.
+  poisson  continuous batching: requests arrive on a simulated Poisson
+           process with ragged prompt/output lengths and stream through the
+           slot scheduler (``repro.serve.scheduler``); per-segment progress
+           and request 0's tokens print live, then aggregate tok/s and
+           p50/p95 latency.
+
 Usage (CPU smoke):
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --batch 4 --prompt-len 16 --new-tokens 32
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --workload poisson --n-requests 16 --rate 50
 """
 from __future__ import annotations
 
@@ -11,20 +23,99 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ALL_ARCH_IDS
 from repro.models.registry import get_arch
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine, SubmitRequest
 from repro.sharding.mesh import MeshPlan
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
 
 
+def _run_batch(eng: ServeEngine, args) -> None:
+    key = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, eng.cfg.vocab_size
+    ).astype(jnp.int32)
+    t0 = time.time()
+    out = eng.generate(prompts, args.new_tokens, key)
+    out.block_until_ready()
+    dt = time.time() - t0
+    tput = args.batch * args.new_tokens / dt
+    log.info("generated %s tokens in %.2fs (%.1f tok/s)", out.shape, dt, tput)
+    print(jax.device_get(out)[:2])
+
+
+def _run_poisson(eng: ServeEngine, args) -> None:
+    if args.rate <= 0:
+        raise SystemExit("--rate must be > 0")
+    if args.n_requests < 1:
+        raise SystemExit("--n-requests must be >= 1")
+    if args.prompt_len < 1 or args.new_tokens < 1:
+        raise SystemExit("--prompt-len and --new-tokens must be >= 1")
+    rng = np.random.RandomState(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.n_requests))
+    min_plen = min(4, args.prompt_len)  # ragged draw floor, prompt_len cap
+    p_lens = rng.randint(min_plen, args.prompt_len + 1, args.n_requests)
+    n_news = rng.randint(max(args.new_tokens // 8, 1), args.new_tokens + 1,
+                         args.n_requests)
+    prompts = [rng.randint(0, eng.cfg.vocab_size, (n,)).astype(np.int32)
+               for n in p_lens]
+
+    def stream0(req, tok):  # live token stream for the first request
+        print(f"  [r0 stream] +{tok}", flush=True)
+
+    sched = ContinuousScheduler(eng, n_slots=args.slots,
+                                segment_len=args.segment_len,
+                                segment_mode=args.segment_mode)
+    handles = []
+    t0 = time.perf_counter()
+    next_arrival = 0
+    while next_arrival < args.n_requests or sched.has_work():
+        now = time.perf_counter() - t0
+        while next_arrival < args.n_requests and arrivals[next_arrival] <= now:
+            i = next_arrival
+            handles.append(sched.submit(SubmitRequest(
+                prompts[i], int(n_news[i]),
+                on_token=stream0 if i == 0 else None,
+            )))
+            log.info("arrive  r%-3d t=%.3fs prompt=%d max_new=%d",
+                     i, now, p_lens[i], n_news[i])
+            next_arrival += 1
+        if sched.has_work():
+            running = sched.run_segment()
+            st = sched.stats
+            log.info("segment %-3d running=%d queued=%d admitted=%d retired=%d "
+                     "steps=%d", st["segments"], running, len(sched.queue),
+                     st["admitted"], st["retired"], st["steps_total"])
+        elif next_arrival < args.n_requests:
+            time.sleep(max(arrivals[next_arrival] - (time.perf_counter() - t0),
+                           0.0))
+    total = time.perf_counter() - t0
+
+    useful = sum(len(h.tokens) for h in handles)
+    lats = np.asarray([h.latency for h in handles])
+    ttfts = np.asarray([h.ttft for h in handles])
+    st = sched.stats
+    log.info("served %d requests / %d tokens in %.2fs — %.1f tok/s",
+             len(handles), useful, total, useful / total)
+    log.info("latency p50=%.3fs p95=%.3fs   ttft p50=%.3fs p95=%.3fs",
+             np.percentile(lats, 50), np.percentile(lats, 95),
+             np.percentile(ttfts, 50), np.percentile(ttfts, 95))
+    log.info("segments=%d slot-steps live=%d masked=%d admissions/slot=%s",
+             st["segments"], st["slot_steps_live"], st["slot_steps_masked"],
+             st["admissions_per_slot"])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b", choices=ALL_ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--workload", default="batch", choices=("batch", "poisson"),
+                    help="batch: one static batch (PR 1 path); poisson: "
+                         "simulated arrivals through the slot scheduler")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
@@ -34,6 +125,14 @@ def main() -> None:
                          "while_loop with eos early-exit, or legacy host loop")
     ap.add_argument("--eos-token", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
+    # poisson-workload knobs
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="mean arrival rate, requests/s")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--segment-len", type=int, default=16)
+    ap.add_argument("--segment-mode", default="while",
+                    choices=("scan", "while"))
     args = ap.parse_args()
 
     arch = get_arch(args.arch, reduced=args.reduced)
@@ -48,17 +147,10 @@ def main() -> None:
         eos_token=args.eos_token,
     )
     eng = ServeEngine(arch, params, plan, sc)
-    key = jax.random.PRNGKey(args.seed + 1)
-    prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, arch.cfg.vocab_size
-    ).astype(jnp.int32)
-    t0 = time.time()
-    out = eng.generate(prompts, args.new_tokens, key)
-    out.block_until_ready()
-    dt = time.time() - t0
-    tput = args.batch * args.new_tokens / dt
-    log.info("generated %s tokens in %.2fs (%.1f tok/s)", out.shape, dt, tput)
-    print(jax.device_get(out)[:2])
+    if args.workload == "poisson":
+        _run_poisson(eng, args)
+    else:
+        _run_batch(eng, args)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ so ``jax.jit(fn).lower(*abstract).compile()`` is the whole dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -38,8 +38,6 @@ from repro.sharding.mesh import MeshPlan
 
 def expert_split_factor(cfg: ModelConfig, tp: int) -> int:
     e = cfg.n_experts
-    if e % tp == 0 or tp % e == 0 and False:
-        pass
     if e % tp == 0:
         return 1
     # smallest split s.t. E·split % tp == 0 and d_ff % split == 0
@@ -63,15 +61,49 @@ def moe_init(key, cfg: ModelConfig) -> Params:
     return p
 
 
+# Deterministic routing (ROADMAP open item): under tp sharding, psum
+# reordering — of the router contraction and of every layer upstream —
+# perturbs the fp32 router logits by ~1e-6 rel between mesh layouts, flipping
+# top-k choices on near-tied experts (~1% of tokens, 0.13 max rel output
+# err).  The SELECTION copy of the logits is therefore snapped to a
+# _ROUTER_QUANTUM grid (coarse enough to swallow layout noise, three orders
+# below anything the softmax cares about), and exact grid ties are broken by
+# a strictly-decreasing epsilon·expert_id bias (sub-quantum, so it never
+# reorders distinct grid values) — the same decision on every layout, without
+# relying on top_k's internal tie behaviour.  Gates stay differentiable: they
+# are gathered from the softmax of the UNQUANTIZED logits.
+#
+# Residual risk (quantified): a logit sitting within the noise width of a
+# half-quantum rounding boundary can still snap differently across layouts.
+# With fp32 noise ~1e-6 and quantum 1e-3 that needs the logit within ~1e-6 of
+# a boundary AND a competing expert within one quantum — ~1e-6 per logit
+# pair, ~1e-3 per 512-logit test run — and is deterministic per (jax
+# version, seed).  Under bf16 compute the upstream noise is ~1e-2, which no
+# quantum can absorb without distorting routing; see ROADMAP open items.
+_ROUTER_QUANTUM = 1e-3
+_TIEBREAK_EPS = 1e-6
+
+
+def _selection_logits(logits: jax.Array) -> jax.Array:
+    """fp32 logits (…, E) → layout-deterministic selection copy (no grad)."""
+    e = logits.shape[-1]
+    snapped = jnp.round(logits / _ROUTER_QUANTUM) * _ROUTER_QUANTUM
+    return jax.lax.stop_gradient(
+        snapped - _TIEBREAK_EPS * jnp.arange(e, dtype=jnp.float32)
+    )
+
+
 def _router(p: Params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """x (B, S, d) → (gates (B, S, k), experts (B, S, k) int32).
 
     Softmax-then-top-k with gate renormalization (Mixtral/DeepSeek style).
-    Router math in fp32 for stability.
+    Router math in fp32 for stability; expert choice is made on the
+    deterministic selection logits, gate values on the smooth probs.
     """
     logits = x.astype(jnp.float32) @ p["router"]["kernel"]
+    _, experts = jax.lax.top_k(_selection_logits(logits), cfg.experts_per_token)
     probs = jax.nn.softmax(logits, axis=-1)
-    gates, experts = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = jnp.take_along_axis(probs, experts, axis=-1)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
     return gates, experts.astype(jnp.int32)
 
@@ -176,10 +208,13 @@ def moe_apply(
     cf = capacity_factor or cfg.moe_capacity_factor
     capacity = max(int(math.ceil(s * k / e * cf)), 1)
 
-    gates, experts = _router(p, cfg, x)  # (B,S,k)
-
     # tokens replicated over model axis inside the MoE block (AG from SP)
+    # BEFORE the router contraction: the router then reduces over the full,
+    # identically-laid-out d axis on every shard, minimizing the layout-
+    # dependent reduction noise the tie-break has to absorb
     x = plan.constrain(x, plan.dp, None, None)
+
+    gates, experts = _router(p, cfg, x)  # (B,S,k)
 
     idx_buf, gate_buf = jax.vmap(
         lambda ee, g: _dispatch_indices(ee, g, e, capacity)
@@ -234,9 +269,10 @@ def moe_apply_dense(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
 
 
 def moe_load_balance_loss(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    """Switch-style auxiliary load-balancing loss (mean fraction · mean prob)."""
+    """Switch-style auxiliary load-balancing loss (mean fraction · mean prob).
+    Expert counts use the same deterministic selection as ``_router``."""
     logits = x.astype(jnp.float32) @ p["router"]["kernel"]
     probs = jax.nn.softmax(logits, -1)
-    _, experts = jax.lax.top_k(probs, cfg.experts_per_token)
+    _, experts = jax.lax.top_k(_selection_logits(logits), cfg.experts_per_token)
     frac = jax.nn.one_hot(experts, cfg.n_experts).mean((0, 1, 2))
     return cfg.n_experts * jnp.sum(frac * probs.mean((0, 1)))

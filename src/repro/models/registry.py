@@ -188,6 +188,58 @@ def check_decode_cache_carry(
     assert not bad, f"{arch.arch_id}: decode changed cache leaf specs: {bad}"
 
 
+CACHE_SLOT_AXIS = 1  # every model family stacks cache leaves (n_layers, B, …)
+
+
+def write_cache_slot(cache, sub_cache, slot):
+    """Write a batch-1 sub-cache into row ``slot`` of a slot cache.
+
+    Contract (``check_slot_cache_contract``): every cache leaf carries the
+    batch/slot dimension on axis ``CACHE_SLOT_AXIS``, so a whole request's
+    state is one axis-1 row per leaf and admission/retirement is a single
+    ``dynamic_update_slice_in_dim`` — no other slot's rows are touched.
+    ``slot`` may be a traced scalar (the serving slot-programs jit over it).
+    """
+    return jax.tree_util.tree_map(
+        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=CACHE_SLOT_AXIS
+        ),
+        cache,
+        sub_cache,
+    )
+
+
+def check_slot_cache_contract(
+    arch: Arch,
+    max_len: int = 8,
+    plan: MeshPlan | None = None,
+    cfg: ModelConfig | None = None,
+) -> None:
+    """Assert the per-slot cache write/reset contract the continuous-batching
+    scheduler relies on: the batch dim of every cache leaf — and ONLY it —
+    lives on axis ``CACHE_SLOT_AXIS``.  Verified structurally by diffing
+    abstract caches at two batch sizes; pure ``eval_shape``, allocates nothing.
+    """
+    plan = plan or MeshPlan()
+    a, b = 3, 5
+    ca = arch.abstract_cache(a, max_len, plan, cfg)
+    cb = arch.abstract_cache(b, max_len, plan, cfg)
+    la, ta = jax.tree_util.tree_flatten(ca)
+    lb, tb = jax.tree_util.tree_flatten(cb)
+    assert ta == tb, f"{arch.arch_id}: cache treedef depends on batch size"
+    bad = []
+    for i, (x, y) in enumerate(zip(la, lb)):
+        want = tuple(
+            b if d == CACHE_SLOT_AXIS else s for d, s in enumerate(x.shape)
+        )
+        if x.dtype != y.dtype or y.shape != want or x.shape[CACHE_SLOT_AXIS] != a:
+            bad.append((i, x.shape, y.shape))
+    assert not bad, (
+        f"{arch.arch_id}: cache leaves whose batch dim is not axis "
+        f"{CACHE_SLOT_AXIS}: {bad}"
+    )
+
+
 def cache_shardings(arch: Arch, cache_abs, plan: MeshPlan, cfg: ModelConfig):
     """Attach NamedShardings to an abstract cache pytree."""
     if plan.mesh is None:

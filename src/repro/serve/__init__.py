@@ -1,2 +1,13 @@
 from repro.serve.engine import ServeEngine, ServeConfig
+from repro.serve.request import Request, SubmitRequest
 from repro.serve.sampling import sample_token
+from repro.serve.scheduler import ContinuousScheduler
+
+__all__ = [
+    "ContinuousScheduler",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "SubmitRequest",
+    "sample_token",
+]

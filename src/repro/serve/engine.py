@@ -32,6 +32,14 @@ Semantics (identical across all three paths, greedy outputs bit-identical):
 the first token is sampled from the prefill logits and is never eos-pinned;
 every subsequent token is eos-checked, and once a sequence has emitted
 ``eos_token`` all its later tokens are pinned to ``eos_token``.
+
+Continuous batching (``repro.serve.scheduler``) builds on two extra compiled
+programs exposed here: ``_prefill_slot`` (prefill one ragged-length request
+into one row of a fixed-capacity slot cache) and ``_slot_segment`` (a
+``lax.scan`` of S masked decode steps over all slots, carry
+``(cache, tok, pos, done, key)`` with per-slot ``active``/``limit`` inputs).
+Both donate the slot cache, so device state persists across segments without
+copies.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -67,9 +75,15 @@ class ServeEngine:
         # traced / called counters: tests assert no-recompile and
         # one-program-per-loop from these.
         self.trace_counts: dict[str, int] = {"prefill": 0, "decode": 0,
-                                             "decode_loop": 0}
+                                             "decode_loop": 0,
+                                             "prefill_slot": 0,
+                                             "slot_segment": 0,
+                                             "slot_segment_while": 0}
         self.call_counts: dict[str, int] = {"prefill": 0, "decode": 0,
-                                            "decode_loop": 0}
+                                            "decode_loop": 0,
+                                            "prefill_slot": 0,
+                                            "slot_segment": 0,
+                                            "slot_segment_while": 0}
 
         def sample(logits, key):
             return sample_token(logits, key, sc.temperature, sc.top_k, sc.top_p)
@@ -143,6 +157,128 @@ class ServeEngine:
             )
             return st[6], st[1]
 
+        # ---------------- slot programs (continuous batching, scheduler.py)
+        #
+        # The slot cache is one ordinary cache pytree of batch = n_slots;
+        # each request owns one axis-1 row of every leaf for its lifetime
+        # (``registry.write_cache_slot`` contract).  Both programs donate the
+        # slot cache, so the scheduler's device state is updated in place
+        # across admissions and segments instead of being copied.
+
+        def prefill_slot(params, cache, tok, pos, done, prompt, slot, key):
+            """Prefill ONE request (1, P) and install it into slot ``slot``.
+
+            Runs at the request's own prompt length — ragged workloads never
+            pad one prompt against another (one trace per distinct P; slot
+            and max_new are traced scalars, so neither retraces).  The whole
+            slot state (cache + tok/pos/done vectors) is donated and updated
+            on device; the host only reads the first sampled token back (one
+            bundled fetch per admit round in the scheduler).
+            """
+            self.trace_counts["prefill_slot"] += 1
+            from repro.models.registry import write_cache_slot
+
+            small = arch.init_cache(1, sc.max_len, plan, cfg=self.cfg)
+            logits, small = arch.forward(
+                params, plan, cfg=self.cfg, tokens=prompt, cache=small
+            )
+            first = sample(logits[:, -1], key)[0]
+            p_len = prompt.shape[1]
+            return (
+                write_cache_slot(cache, small, slot),
+                tok.at[slot].set(first),
+                pos.at[slot].set(p_len),
+                done.at[slot].set(False),
+                first,
+            )
+
+        def slot_step(params, cache, tok, pos, done, key, active, limit):
+            """One masked decode step over all slots (shared by both segment
+            flavours — the scan/while bit-identical contract depends on it).
+
+            Slots that are inactive or done still flow through the
+            fixed-shape forward but are masked: their pos freezes (no
+            cache-row growth), their carried token is held, and their
+            emitted entry is −1 so the host scheduler drops it.  Live slots
+            follow the exact PR 1 step semantics (eos-check then pin), so
+            greedy outputs are bit-identical to ``generate`` on a uniform
+            workload.
+            """
+            key, sub = jax.random.split(key)
+            logits, cache = arch.forward(
+                params, plan, cfg=self.cfg, tokens=tok[:, None],
+                cache=cache, cache_pos=pos,
+            )
+            nxt = sample(logits[:, 0], sub)
+            live = active & ~done
+            if sc.eos_token >= 0:
+                done = done | (live & (nxt == sc.eos_token))
+            emitted = jnp.where(live, nxt, -1)
+            tok = jnp.where(live, nxt, tok)
+            pos = jnp.where(live, pos + 1, pos)
+            done = done | (active & (pos >= limit))
+            return cache, tok, pos, done, key, emitted
+
+        def slot_segment(n_steps, params, cache, tok, pos, done, key,
+                         active, limit):
+            """Run ``n_steps`` decode steps over every slot (fixed capacity).
+
+            Carry on device: (cache, tok, pos, done, key); ``active`` (slot
+            holds a live request — host-owned, retirement clears it) and
+            ``limit`` (last write position = prompt_len + max_new − 1) are
+            per-slot segment inputs.  Step semantics: ``slot_step``.
+            """
+            self.trace_counts["slot_segment"] += 1
+
+            def body(carry, _):
+                cache, tok, pos, done, key, emitted = slot_step(
+                    params, *carry, active, limit
+                )
+                return (cache, tok, pos, done, key), emitted
+
+            (cache, tok, pos, done, key), toks = jax.lax.scan(
+                body, (cache, tok, pos, done, key), length=n_steps
+            )
+            return toks.T, cache, tok, pos, done, key  # toks (n_slots, S)
+
+        def slot_segment_while(n_steps, params, cache, tok, pos, done, key,
+                               active, limit, stop_on_free):
+            """``slot_segment`` with a ``lax.while_loop`` and early exit.
+
+            Same per-step math (``slot_step``, so greedy outputs are
+            bit-identical to the scan segment), but the loop stops as soon
+            as (a) every active slot is done, or (b) any slot newly finished
+            while ``stop_on_free`` is set (the scheduler passes
+            queue-non-empty) — so a freed slot returns to the host for
+            refilling immediately instead of riding out the rest of a fixed
+            segment masked.  ``n_steps`` is the cap / output width; untaken
+            columns come back as −1.
+            """
+            self.trace_counts["slot_segment_while"] += 1
+            n_slots = tok.shape[0]
+            out0 = jnp.full((n_slots, n_steps), -1, jnp.int32)
+
+            def cond(st):
+                i, _cache, _tok, _pos, done, _key, _out = st
+                any_running = jnp.any(active & ~done)
+                freed = jnp.any(active & done)
+                return (i < n_steps) & any_running & ~(stop_on_free & freed)
+
+            def loop_body(st):
+                i, cache, tok, pos, done, key, out = st
+                cache, tok, pos, done, key, emitted = slot_step(
+                    params, cache, tok, pos, done, key, active, limit
+                )
+                out = jax.lax.dynamic_update_slice(out, emitted[:, None], (0, i))
+                return i + 1, cache, tok, pos, done, key, out
+
+            st = jax.lax.while_loop(
+                cond, loop_body,
+                (jnp.int32(0), cache, tok, pos, done, key, out0),
+            )
+            _, cache, tok, pos, done, key, out = st
+            return out, cache, tok, pos, done, key
+
         if sc.jit:
             self._prefill = jax.jit(prefill)
             self._decode = jax.jit(decode)
@@ -152,13 +288,37 @@ class ServeEngine:
             self._decode_loop = jax.jit(
                 loop_fn, static_argnums=(0,), donate_argnums=(2,)
             )
+            # donate the whole device slot state (cache + tok/pos/done) so
+            # admissions and segments update it in place across calls
+            self._prefill_slot = jax.jit(
+                prefill_slot, donate_argnums=(1, 2, 3, 4)
+            )
+            self._slot_segment = jax.jit(
+                slot_segment, static_argnums=(0,), donate_argnums=(2, 3, 4, 5)
+            )
+            self._slot_segment_while = jax.jit(
+                slot_segment_while, static_argnums=(0,),
+                donate_argnums=(2, 3, 4, 5),
+            )
         else:
             self._prefill, self._decode = prefill, decode
             self._decode_loop = (
                 decode_loop if sc.loop != "while" else decode_loop_while
             )
+            self._prefill_slot, self._slot_segment = prefill_slot, slot_segment
+            self._slot_segment_while = slot_segment_while
 
     # ------------------------------------------------------------- public
+
+    def init_slot_cache(self, n_slots: int):
+        """Fresh slot cache (batch = n_slots, length = max_len) for the
+        continuous-batching scheduler.  Verifies the per-slot write contract
+        once (cheap, eval_shape only) before allocating."""
+        from repro.models.registry import check_slot_cache_contract
+
+        check_slot_cache_contract(self.arch, plan=self.plan, cfg=self.cfg)
+        return self.arch.init_cache(n_slots, self.sc.max_len, self.plan,
+                                    cfg=self.cfg)
 
     def generate(
         self, prompts: jax.Array, n_new: int, key: jax.Array | None = None

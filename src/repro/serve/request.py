@@ -1,0 +1,69 @@
+"""Request objects for the continuous-batching scheduler.
+
+``SubmitRequest`` is what a client hands to ``ContinuousScheduler.submit``;
+the scheduler wraps it in a live ``Request`` handle whose ``tokens`` list
+grows as segments complete (streaming: ``on_token`` fires once per generated
+token, in order, including the prefill-sampled first token).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+QUEUED = "queued"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class SubmitRequest:
+    """Client-side submission: a prompt and a generation budget."""
+
+    prompt: Sequence[int] | np.ndarray
+    max_new_tokens: int
+    on_token: Callable[["Request", int], None] | None = None
+
+
+@dataclasses.dataclass
+class Request:
+    """Live handle: state, streamed tokens, and host-side timing."""
+
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    on_token: Callable[["Request", int], None] | None = None
+    state: str = QUEUED
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    slot_history: list[int] = dataclasses.field(default_factory=list)
+    submit_t: float = 0.0
+    first_token_t: float | None = None
+    finish_t: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.state == FINISHED
+
+    @property
+    def latency(self) -> float | None:
+        """Submit → last token (None until finished)."""
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.submit_t
+
+    @property
+    def ttft(self) -> float | None:
+        """Submit → first token (None until prefilled)."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    def _emit(self, token: int) -> None:
+        self.tokens.append(token)
+        if self.on_token is not None:
+            self.on_token(self, token)

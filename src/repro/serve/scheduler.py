@@ -1,0 +1,240 @@
+"""Continuous-batching scheduler: slot-based KV cache over the compiled
+slot programs of ``ServeEngine`` (see docs/serving.md).
+
+The device never sees requests — it sees a fixed-capacity slot state.
+``cache``/``tok``/``pos``/``done`` live on device and are DONATED through
+every slot-program call (prefill and segment update them in place, no
+copies and no per-call host round-trips); ``active``/``limit`` are
+host-owned policy vectors uploaded with each segment call:
+
+    cache  slot cache, one axis-1 row per slot (``registry.write_cache_slot``)
+    tok    (n_slots,) last sampled token per slot                    [device]
+    pos    (n_slots,) next cache write position (per-slot offsets)   [device]
+    done   (n_slots,) emitted eos or hit its write limit             [device]
+    active (n_slots,) slot holds a live request                      [host]
+    limit  (n_slots,) last write position = prompt_len + max_new − 1 [host]
+
+Between compiled segments the host scheduler:
+
+    admit   pop queued requests into free slots — one ``_prefill_slot`` call
+            per request at its OWN prompt length (no cross-request padding);
+            the prefill-sampled first tokens stream after one bundled fetch
+    run     one ``_slot_segment`` launch = ``segment_len`` decode steps for
+            every slot; finished slots ride along masked (active=0 → emitted
+            −1, pos frozen) so the program never retraces.  The only
+            per-segment download is the (n_slots, segment_len) token block
+    retire  finished slots (eos seen or token budget reached — both host-
+            derivable from the token block) stream their tokens, record
+            latency, and free their row for the next admission
+
+Uniform workloads reproduce ``ServeEngine.generate`` bit-identically under
+greedy decoding (tests/test_serve_scheduler.py); mixed workloads win
+throughput by replacing dead padded rows with live requests.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+from repro.serve.request import FINISHED, RUNNING, Request, SubmitRequest
+from repro.utils.logging import get_logger
+
+log = get_logger("serve.scheduler")
+
+
+class ContinuousScheduler:
+    def __init__(
+        self,
+        engine: ServeEngine,
+        n_slots: int = 4,
+        segment_len: int = 8,
+        segment_mode: str | None = None,
+        seed: int = 0,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        assert n_slots >= 1 and segment_len >= 1, (n_slots, segment_len)
+        # "scan": fixed segment_len steps per launch.  "while": segment_len
+        # becomes a cap; the compiled loop exits early at the first
+        # retirement boundary (when the queue is non-empty) so freed slots
+        # refill without riding out the segment masked.  Defaults to the
+        # engine's loop flavour.
+        self.segment_mode = segment_mode or (
+            "while" if engine.sc.loop == "while" else "scan"
+        )
+        assert self.segment_mode in ("scan", "while"), self.segment_mode
+        self.engine = engine
+        self.n_slots = n_slots
+        self.segment_len = segment_len
+        self.clock = clock
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Request | None] = [None] * n_slots
+        # device-resident slot state (donated through every program call)
+        self.cache = engine.init_slot_cache(n_slots)
+        self.tok = jnp.zeros(n_slots, jnp.int32)
+        self.pos = jnp.zeros(n_slots, jnp.int32)
+        self.done = jnp.zeros(n_slots, bool)
+        self.key = jax.random.PRNGKey(seed)
+        # host-owned policy vectors
+        self.active = np.zeros(n_slots, bool)
+        self.limit = np.zeros(n_slots, np.int32)
+        self._next_rid = 0
+        self.stats = {
+            "segments": 0,
+            "admitted": 0,
+            "retired": 0,
+            "steps_total": 0,
+            "slot_steps_live": 0,
+            "slot_steps_masked": 0,
+            "admissions_per_slot": [0] * n_slots,
+        }
+
+    # ------------------------------------------------------------- submit
+
+    def submit(
+        self,
+        prompt: Sequence[int] | np.ndarray | SubmitRequest,
+        max_new_tokens: int | None = None,
+        on_token=None,
+    ) -> Request:
+        """Queue one request; returns its live handle (tokens stream into
+        ``handle.tokens`` as segments complete)."""
+        if isinstance(prompt, SubmitRequest):
+            sub = prompt
+        else:
+            sub = SubmitRequest(prompt, max_new_tokens, on_token)
+        p = np.asarray(sub.prompt, np.int32).reshape(-1)
+        assert p.size >= 1, "empty prompt"
+        assert sub.max_new_tokens >= 1, sub.max_new_tokens
+        assert p.size + sub.max_new_tokens <= self.engine.sc.max_len, (
+            f"prompt {p.size} + max_new {sub.max_new_tokens} exceeds "
+            f"max_len {self.engine.sc.max_len}"
+        )
+        req = Request(
+            rid=self._next_rid,
+            prompt=p,
+            max_new_tokens=sub.max_new_tokens,
+            on_token=sub.on_token,
+            submit_t=self.clock(),
+        )
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    # -------------------------------------------------------------- admit
+
+    def _admit(self) -> int:
+        """Fill every free slot from the queue (prefill-into-slot).  All
+        prefills dispatch first; first tokens stream after ONE bundled
+        device fetch."""
+        eng = self.engine
+        pending: list[tuple[Request, int, jax.Array]] = []
+        for slot in range(self.n_slots):
+            while self.slots[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.key, sub = jax.random.split(self.key)
+                self.cache, self.tok, self.pos, self.done, first = (
+                    eng._prefill_slot(
+                        eng.params, self.cache, self.tok, self.pos, self.done,
+                        jnp.asarray(req.prompt)[None, :], jnp.int32(slot), sub,
+                    )
+                )
+                eng.call_counts["prefill_slot"] += 1
+                pending.append((req, slot, first))
+                self.stats["admitted"] += 1
+                self.stats["admissions_per_slot"][slot] += 1
+                if req.max_new_tokens <= 1:  # prefill token is the budget:
+                    continue  # finished below; slot stays free — refill it
+                req.state = RUNNING
+                self.slots[slot] = req
+                self.active[slot] = True
+                self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
+        if not pending:
+            return 0
+        firsts = jax.device_get([f for _, _, f in pending])
+        now = self.clock()
+        for (req, slot, _), first in zip(pending, firsts):
+            req.first_token_t = now
+            req.slot_history.append(slot)
+            req._emit(int(first))
+            if req.max_new_tokens <= 1:
+                req.state = FINISHED
+                req.finish_t = now
+                self.stats["retired"] += 1
+        return len(pending)
+
+    # ------------------------------------------------------------ segment
+
+    def run_segment(self) -> int:
+        """admit → one compiled segment → stream + retire.  Returns the
+        number of requests still running afterwards."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        eng = self.engine
+        if self.segment_mode == "while":
+            toks, self.cache, self.tok, self.pos, self.done, self.key = (
+                eng._slot_segment_while(
+                    self.segment_len, eng.params, self.cache,
+                    self.tok, self.pos, self.done, self.key,
+                    jnp.asarray(self.active), jnp.asarray(self.limit),
+                    jnp.bool_(bool(self.queue)),
+                )
+            )
+            eng.call_counts["slot_segment_while"] += 1
+        else:
+            toks, self.cache, self.tok, self.pos, self.done, self.key = (
+                eng._slot_segment(
+                    self.segment_len, eng.params, self.cache,
+                    self.tok, self.pos, self.done, self.key,
+                    jnp.asarray(self.active), jnp.asarray(self.limit),
+                )
+            )
+            eng.call_counts["slot_segment"] += 1
+        toks = np.asarray(toks)  # the only per-segment download
+        self.stats["segments"] += 1
+        # steps actually executed: every executed step has ≥1 live emission
+        # (while-mode exits instead of running fully-masked steps)
+        n_exec = (int((toks >= 0).any(axis=0).sum())
+                  if self.segment_mode == "while" else self.segment_len)
+        self.stats["steps_total"] += n_exec
+        eos = eng.sc.eos_token
+        now = self.clock()
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                self.stats["slot_steps_masked"] += n_exec
+                continue
+            emitted = toks[slot]
+            n_live = int((emitted >= 0).sum())
+            self.stats["slot_steps_live"] += n_live
+            self.stats["slot_steps_masked"] += n_exec - n_live
+            saw_eos = False
+            for t in emitted:
+                if t >= 0 and len(req.tokens) < req.max_new_tokens:
+                    req._emit(int(t))
+                    saw_eos = saw_eos or (eos >= 0 and t == eos)
+            if saw_eos or len(req.tokens) >= req.max_new_tokens:
+                req.state = FINISHED
+                req.finish_t = now
+                self.slots[slot] = None
+                self.active[slot] = False
+                self.stats["retired"] += 1
+        return sum(r is not None for r in self.slots)
+
+    # ---------------------------------------------------------------- run
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def run(self, max_segments: int = 100_000) -> None:
+        """Drain the queue: run segments until every request has finished."""
+        for _ in range(max_segments):
+            if not self.has_work():
+                return
+            self.run_segment()
+        raise RuntimeError(f"scheduler did not drain in {max_segments} segments")

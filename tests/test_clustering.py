@@ -11,7 +11,6 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core.clustering import (
-    ClusteredWeight,
     ClusteringConfig,
     cluster_params,
     cluster_weights,

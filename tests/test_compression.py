@@ -23,7 +23,6 @@ from repro.core.compression import (
     compressed_fc_apply,
     compressed_fc_matvec,
     conv2d_via_im2col,
-    im2col,
 )
 
 

@@ -49,16 +49,19 @@ def test_sharded_forward_equals_single_device():
     assert "FWD_EQUIV_OK" in out
 
 
-@pytest.mark.xfail(
-    reason="pre-existing (seed): sharded router psum reorders the fp32 "
-    "contraction, flipping near-tied top-k expert choices for ~1% of tokens "
-    "(max rel err ~0.13 on jax 0.4.37) — tracked in ROADMAP open items",
-    strict=False,
-)
 def test_sharded_moe_equals_single_device():
+    """Fixed in PR 2 (was xfail): expert choice now runs on quantized
+    selection logits with an epsilon·expert_id tie-break (models.moe), so
+    top-k is identical on every mesh layout as long as cross-layout numeric
+    noise stays below the selection quantum (1e-3).  The test compares in
+    fp32 compute, where cross-layout noise is ~1e-6 — under bf16 compute the
+    UPSTREAM layers themselves diverge ~1% between layouts, an order above
+    near-tie gaps, which makes cross-layout equality of any discrete routing
+    decision ill-posed (see ROADMAP open items)."""
     out = _run("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
         import jax, jax.numpy as jnp, numpy as np
         from repro.models.registry import get_arch
         from repro.sharding.mesh import MeshPlan, make_plan
@@ -66,6 +69,9 @@ def test_sharded_moe_equals_single_device():
         from repro.launch.mesh import make_debug_mesh
 
         arch = get_arch("moonshot-v1-16b-a3b", reduced=True)
+        arch = dataclasses.replace(
+            arch, cfg=dataclasses.replace(arch.cfg, compute_dtype="float32")
+        )
         params = arch.init_params(jax.random.PRNGKey(0))
         toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 256).astype(jnp.int32)
         ref, _ = jax.jit(lambda p, t: arch.forward(p, MeshPlan(), tokens=t))(params, toks)
@@ -78,7 +84,8 @@ def test_sharded_moe_equals_single_device():
             got, _ = jax.jit(lambda p, t: arch.forward(p, plan, tokens=t))(p_sh, toks)
         err = np.abs(np.asarray(got, np.float32) - np.asarray(ref, np.float32)).max()
         scale = np.abs(np.asarray(ref, np.float32)).max()
-        assert err / scale < 0.02, (err, scale)
+        # any routing flip shows up as ~0.1 rel err; fp32 noise is ~1e-6
+        assert err / scale < 1e-3, (err, scale)
         print("MOE_EQUIV_OK")
     """)
     assert "MOE_EQUIV_OK" in out

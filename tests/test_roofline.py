@@ -4,9 +4,6 @@ import numpy as np
 
 from repro.configs.base import SHAPES, get_config
 from repro.roofline.analysis import (
-    CollectiveOp,
-    _parse_computations,
-    _while_trip_counts,
     parse_collectives,
     roofline_terms,
 )

@@ -1,0 +1,182 @@
+"""Continuous-batching scheduler (ISSUE 2 acceptance tests): slot reuse,
+ragged prompts, bit-identical greedy outputs vs the static engine, the
+per-slot cache contract, and the no-retrace guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import check_slot_cache_contract, get_arch
+from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine, SubmitRequest
+from repro.sharding.mesh import MeshPlan
+
+PLAN = MeshPlan()
+
+
+@pytest.fixture(scope="module")
+def arch_params():
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    return arch, params
+
+
+def _engine(arch_params, **kw):
+    arch, params = arch_params
+    return ServeEngine(arch, params, PLAN, ServeConfig(max_len=64, **kw))
+
+
+def _prompt(seed, length):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (length,), 0, 256), np.int32
+    )
+
+
+# --------------------------------------------- uniform ≡ static engine
+
+
+@pytest.mark.parametrize("mode", ["scan", "while"])
+def test_uniform_workload_bit_identical_to_static_engine(arch_params, mode):
+    """Greedy per-request outputs on a uniform workload are bit-identical to
+    ``ServeEngine.generate`` — even though the scheduler serves 6 requests
+    through 3 slots (two waves) with per-request prefill."""
+    prompts = jnp.stack([jnp.asarray(_prompt(i, 8)) for i in range(6)])
+    want = np.asarray(_engine(arch_params).generate(prompts, 10))
+    sched = ContinuousScheduler(
+        _engine(arch_params), n_slots=3, segment_len=4, segment_mode=mode
+    )
+    handles = [sched.submit(np.asarray(prompts[i]), 10) for i in range(6)]
+    sched.run()
+    got = np.stack([h.tokens for h in handles])
+    np.testing.assert_array_equal(got, want, err_msg=mode)
+    assert all(h.done for h in handles)
+
+
+# --------------------------------------------------------- ragged prompts
+
+
+def test_ragged_prompt_lengths_match_per_request_engine(arch_params):
+    """No cross-request prompt padding: each ragged request decodes exactly
+    what a dedicated batch-1 engine run produces."""
+    lens = [4, 7, 11, 5, 9]
+    news = [6, 12, 3, 1, 9]
+    prompts = [_prompt(10 + i, n) for i, n in enumerate(lens)]
+    sched = ContinuousScheduler(_engine(arch_params), n_slots=2, segment_len=5)
+    handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    sched.run()
+    for p, n, h in zip(prompts, news, handles):
+        want = np.asarray(
+            _engine(arch_params).generate(jnp.asarray(p)[None, :], n)
+        )[0]
+        np.testing.assert_array_equal(np.asarray(h.tokens), want,
+                                      err_msg=f"rid={h.rid}")
+        assert len(h.tokens) == n
+
+
+# ------------------------------------------------------------- slot reuse
+
+
+def test_slot_reuse_after_retirement(arch_params):
+    """More requests than slots: retired slots are refilled (admissions per
+    slot > 1) and every request still completes with its own budget."""
+    n_req, n_slots = 7, 2
+    news = [3, 8, 2, 5, 1, 6, 4]
+    sched = ContinuousScheduler(_engine(arch_params), n_slots=n_slots,
+                                segment_len=4)
+    handles = [sched.submit(_prompt(20 + i, 6), n) for i, n in enumerate(news)]
+    sched.run()
+    assert all(h.done for h in handles)
+    assert [len(h.tokens) for h in handles] == news
+    st = sched.stats
+    assert st["admitted"] == st["retired"] == n_req
+    assert sum(st["admissions_per_slot"]) == n_req
+    assert max(st["admissions_per_slot"]) >= 2  # at least one slot reused
+    assert all(r is None for r in sched.slots)
+    # each request was pinned to exactly one slot for its whole lifetime
+    assert all(len(h.slot_history) == 1 for h in handles)
+
+
+def test_max_new_one_finishes_at_admission(arch_params):
+    """A 1-token request is satisfied by its prefill sample alone and never
+    occupies a slot across a segment."""
+    eng = _engine(arch_params)
+    want = np.asarray(eng.generate(jnp.asarray(_prompt(30, 5))[None, :], 1))[0]
+    sched = ContinuousScheduler(eng, n_slots=2, segment_len=4)
+    h = sched.submit(_prompt(30, 5), 1)
+    sched.run()
+    assert h.done and h.tokens == [int(want[0])]
+    assert sched.stats["segments"] == 0
+
+
+# ------------------------------------------------------------ eos + stream
+
+
+def test_eos_retires_request_and_frees_slot(arch_params):
+    base = np.asarray(_engine(arch_params).generate(
+        jnp.asarray(_prompt(40, 8))[None, :], 12))[0]
+    eos = int(base[4])  # a token greedy decoding actually emits mid-stream
+    sched = ContinuousScheduler(
+        _engine(arch_params, eos_token=eos), n_slots=1, segment_len=4
+    )
+    h = sched.submit(_prompt(40, 8), 12)
+    h2 = sched.submit(_prompt(41, 8), 3)  # queued behind; needs the slot back
+    sched.run()
+    assert h.done and h2.done
+    assert eos in h.tokens and h.tokens[-1] == eos  # stops at first eos
+    assert len(h.tokens) < 12
+    assert len(h2.tokens) == 3
+
+
+def test_streaming_callback_order(arch_params):
+    seen = []
+    sched = ContinuousScheduler(_engine(arch_params), n_slots=2, segment_len=3)
+    h = sched.submit(SubmitRequest(_prompt(50, 6), 7,
+                                   on_token=lambda r, t: seen.append(t)))
+    sched.run()
+    assert seen == h.tokens and len(seen) == 7
+    assert h.ttft is not None and h.latency is not None
+    assert 0 <= h.ttft <= h.latency
+
+
+# -------------------------------------------------------- compiled once
+
+
+@pytest.mark.parametrize("mode", ["scan", "while"])
+def test_slot_programs_compiled_once_across_segments(arch_params, mode):
+    """The slot-step program is compiled exactly once for the whole run, no
+    matter how many segments, admissions, or retirements occur; prefill
+    compiles once per distinct prompt length (slot index is traced)."""
+    eng = _engine(arch_params)
+    sched = ContinuousScheduler(eng, n_slots=2, segment_len=3,
+                                segment_mode=mode)
+    lens = [4, 7, 4, 7, 4]  # 2 distinct prompt lengths
+    handles = [sched.submit(_prompt(60 + i, n), 5 + i) for i, n in enumerate(lens)]
+    sched.run()
+    assert all(h.done for h in handles)
+    assert sched.stats["segments"] >= 2  # the program really ran repeatedly
+    seg_key = "slot_segment" if mode == "scan" else "slot_segment_while"
+    assert eng.trace_counts[seg_key] == 1
+    seg_fn = (eng._slot_segment if mode == "scan"
+              else eng._slot_segment_while)
+    assert seg_fn._cache_size() == 1
+    assert eng.call_counts[seg_key] == sched.stats["segments"]
+    assert eng.trace_counts["prefill_slot"] == 2  # one per distinct length
+    assert eng._prefill_slot._cache_size() == 2
+    assert eng.call_counts["prefill_slot"] == len(lens)
+
+
+# ------------------------------------------------------- cache contract
+
+
+@pytest.mark.parametrize("arch_id", ["tinyllama-1.1b", "zamba2-7b", "rwkv6-3b"])
+def test_slot_cache_contract_across_families(arch_id):
+    """Every serving family keeps the batch/slot dim of every cache leaf on
+    the axis ``write_cache_slot`` updates."""
+    check_slot_cache_contract(get_arch(arch_id, reduced=True))
+
+
+def test_submit_validation(arch_params):
+    sched = ContinuousScheduler(_engine(arch_params), n_slots=1)
+    with pytest.raises(AssertionError):
+        sched.submit(_prompt(70, 60), 10)  # exceeds max_len=64
+    with pytest.raises(AssertionError):
+        sched.submit(_prompt(71, 4), 0)  # empty budget

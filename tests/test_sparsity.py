@@ -18,7 +18,6 @@ from repro.core.sparsity import (
     gradual_sparsity_schedule,
     l2_regularization,
     magnitude_prune_mask,
-    sparsity_of,
 )
 
 
