@@ -4,13 +4,15 @@ committed baseline.
 Usage (what .github/workflows/ci.yml runs):
 
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
-    BENCH_REPEATS=1 python benchmarks/run.py --only serve_decode,serve_continuous
+    BENCH_REPEATS=1 python benchmarks/run.py \
+        --only serve_decode,serve_continuous,serve_paged
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
-speedup per batch, continuous-vs-static aggregate speedup): both sides of
-each ratio run on the same machine in the same process, so they transfer
-between the committing box and a CI runner.
+speedup per batch, continuous-vs-static aggregate speedup, paged-vs-dense
+tok/s and peak-cache-bytes): both sides of each ratio run on the same
+machine in the same process, so they transfer between the committing box
+and a CI runner.
 
 Gate contract — be explicit about what binds: a ratio FAILS when it is below
 the ``--tolerance`` band (default 0.30, env PERF_GATE_TOL) under baseline
@@ -45,14 +47,21 @@ RATIO_METRICS = {
     "serve_decode.batch.1.decode_speedup": 1.3,
     "serve_decode.batch.4.decode_speedup": 1.3,
     "serve_continuous.speedup_tok_s": 1.15,
+    # paged KV must hold ~dense throughput (its win is the memory ceiling)
+    "serve_paged.tok_s_ratio": 0.9,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
     "serve_decode.batch.4.decode_tok_s_compiled",
     "serve_continuous.continuous.tok_s",
     "serve_continuous.static.tok_s",
+    "serve_paged.paged.tok_s",
+    "serve_paged.dense.tok_s",
 ]
 SPEEDUP_FLOOR_METRIC = "serve_continuous.speedup_tok_s"
+# hard floor, no tolerance: peak paged cache bytes must stay ≤ dense (the
+# ratio is shape-derived, deterministic — ISSUE 3 acceptance criterion)
+PAGED_BYTES_METRIC = "serve_paged.cache_bytes_saved_x"
 
 
 def _lookup(data: dict, path: str):
@@ -135,6 +144,17 @@ def main() -> int:
         )
     else:
         print(f"speedup floor: {floor:.2f}x >= {args.min_speedup}x")
+
+    saved = _lookup(new, PAGED_BYTES_METRIC)
+    if saved is None:
+        failures.append(f"{PAGED_BYTES_METRIC}: missing from new run")
+    elif saved < 1.0:
+        failures.append(
+            f"{PAGED_BYTES_METRIC}: {saved:.2f}x — paged peak cache bytes "
+            "exceed the dense slot layout"
+        )
+    else:
+        print(f"paged cache bytes: {saved:.2f}x smaller than dense (>= 1.0x)")
 
     if failures:
         print("\nPERF GATE FAILED:")

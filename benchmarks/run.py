@@ -7,12 +7,13 @@ compile time), then the median of ``BENCH_REPEATS`` timed repeats (default 3,
 env-overridable), each fenced with ``jax.block_until_ready``.  Repeat calls
 run with stdout suppressed so tables print once.
 
-``serve_decode`` and ``serve_continuous`` additionally record into
-machine-readable ``BENCH_serve.json`` (each under its own section —
-compiled-vs-python decode tok/s per batch size, and continuous-vs-static
-aggregate tok/s + p50/p95 request latency) so the serving-perf trajectory is
-tracked across PRs; CI's perf gate (``benchmarks/perf_gate.py``) compares a
-fresh run of both against the committed copy.  Select a subset with
+``serve_decode``, ``serve_continuous``, and ``serve_paged`` additionally
+record into machine-readable ``BENCH_serve.json`` (each under its own
+section — compiled-vs-python decode tok/s per batch size,
+continuous-vs-static aggregate tok/s + p50/p95 request latency, and
+paged-vs-dense KV tok/s + peak cache bytes) so the serving-perf trajectory
+is tracked across PRs; CI's perf gate (``benchmarks/perf_gate.py``) compares
+a fresh run against the committed copy.  Select a subset with
 ``--only name1,name2``.
 
   table1_table3   — CNN zoo: our vs paper parameter counts; sparsify+cluster
@@ -270,8 +271,9 @@ def kernel_traffic():
 
 def _merge_bench_json(section: str, payload: dict) -> str:
     """Merge one bench's payload under its section key in BENCH_serve.json
-    (env BENCH_SERVE_JSON), preserving the other sections — serve_decode and
-    serve_continuous both record here and either can run alone via --only."""
+    (env BENCH_SERVE_JSON), preserving the other sections — serve_decode,
+    serve_continuous, and serve_paged all record here and any can run alone
+    via --only."""
     path = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
     data: dict = {}
     if os.path.exists(path):
@@ -466,6 +468,98 @@ def serve_continuous():
     return out
 
 
+# ------------------------------------------------------------- serve paged
+
+
+def serve_paged():
+    """Paged-KV vs dense slot layout on the heavy-tailed continuous-batching
+    workload: aggregate tok/s and PEAK CACHE BYTES (the paged win — pool
+    bytes track the live-context sum instead of n_slots × max_len), recorded
+    under "serve_paged" in BENCH_serve.json.  Greedy outputs are asserted
+    bit-identical between the two layouts before timing.
+    """
+    from repro.models.registry import get_arch
+    from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine
+    from repro.sharding.mesh import MeshPlan
+
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    plan = MeshPlan()
+    # the serve_continuous heavy-tailed workload; the paged pool is sized to
+    # the worst concurrent block demand (36 blocks), well under the
+    # dense-equivalent 4 slots × 192/16 = 48
+    n_slots, seg_len, max_len, block_len, n_blocks = 4, 16, 192, 16, 36
+    lens = [4, 16, 8, 12, 4, 16, 6, 10, 14, 8, 4, 12]
+    news = [144, 8, 16, 4, 120, 12, 4, 144, 8, 4, 16, 108]
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, arch.cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    useful = sum(news)
+    engines = {
+        "dense": ServeEngine(arch, params, plan,
+                             ServeConfig(max_len=max_len, temperature=0.0)),
+        "paged": ServeEngine(arch, params, plan,
+                             ServeConfig(max_len=max_len, temperature=0.0,
+                                         kv_layout="paged",
+                                         block_len=block_len)),
+    }
+
+    def cache_bytes(sched) -> int:
+        state = sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(sched.cache))
+        if sched.paged:
+            state += sched.block_table.nbytes
+        return state
+
+    def run(layout):
+        t0 = time.perf_counter()
+        sched = ContinuousScheduler(
+            engines[layout], n_slots=n_slots, segment_len=seg_len,
+            segment_mode="while",
+            n_blocks=n_blocks if layout == "paged" else None,
+        )
+        handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+        sched.run()
+        total = time.perf_counter() - t0
+        return total, cache_bytes(sched), [h.tokens for h in handles], sched.stats
+
+    # warmup (compiles every slot program) + output-equivalence assertion
+    _, dense_bytes, dense_toks, _ = run("dense")
+    _, paged_bytes, paged_toks, _ = run("paged")
+    assert dense_toks == paged_toks, "paged outputs diverged from dense"
+    # interleave timed reps so both layouts sample the same box state
+    reps = max(BENCH_REPEATS, 3)
+    runs = {"dense": [], "paged": []}
+    for _ in range(reps):
+        for layout in ("dense", "paged"):
+            runs[layout].append(run(layout))
+    out = {
+        "arch": "tinyllama-1.1b (reduced)",
+        "workload": {"n_requests": len(prompts), "prompt_lens": lens,
+                     "new_tokens": news, "n_slots": n_slots,
+                     "segment_len": seg_len, "segment_mode": "while",
+                     "block_len": block_len, "n_blocks": n_blocks},
+    }
+    for layout in ("dense", "paged"):
+        t, nbytes, _, stats = min(runs[layout], key=lambda r: r[0])
+        out[layout] = {"tok_s": useful / t, "cache_bytes": nbytes}
+        if layout == "paged":
+            out[layout]["blocks_in_use_peak"] = stats["blocks_in_use_peak"]
+            out[layout]["admit_deferred"] = stats["admit_deferred"]
+    out["tok_s_ratio"] = out["paged"]["tok_s"] / out["dense"]["tok_s"]
+    out["cache_bytes_saved_x"] = (out["dense"]["cache_bytes"]
+                                  / out["paged"]["cache_bytes"])
+    print("\n== serve_paged: paged KV pool vs dense slot rows ==")
+    print(f"{'layout':>7s} {'tok/s':>9s} {'cache MB':>9s}")
+    for layout in ("dense", "paged"):
+        r = out[layout]
+        print(f"{layout:>7s} {r['tok_s']:9.1f} {r['cache_bytes']/1e6:9.2f}")
+    print(f"tok/s ratio {out['tok_s_ratio']:.2f}x at "
+          f"{out['cache_bytes_saved_x']:.2f}x smaller cache "
+          f"(peak blocks {out['paged']['blocks_in_use_peak']}/{n_blocks})")
+    _merge_bench_json("serve_paged", out)
+    return out
+
+
 # ---------------------------------------------------------------- roofline
 
 
@@ -510,9 +604,11 @@ def main() -> None:
          lambda o: f"decode_speedup={o['min_speedup']:.1f}x"),
         ("serve_continuous", serve_continuous,
          lambda o: f"speedup={o['speedup_tok_s']:.2f}x"),
+        ("serve_paged", serve_paged,
+         lambda o: f"bytes_saved={o['cache_bytes_saved_x']:.2f}x"),
         ("roofline_table", roofline_table, lambda o: f"cells={o.get('cells', 0)}"),
     ]
-    self_timed = {"serve_decode", "serve_continuous"}
+    self_timed = {"serve_decode", "serve_continuous", "serve_paged"}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench names (default: all)")

@@ -69,7 +69,8 @@ def _run_poisson(eng: ServeEngine, args) -> None:
 
     sched = ContinuousScheduler(eng, n_slots=args.slots,
                                 segment_len=args.segment_len,
-                                segment_mode=args.segment_mode)
+                                segment_mode=args.segment_mode,
+                                n_blocks=args.n_blocks)
     handles = []
     t0 = time.perf_counter()
     next_arrival = 0
@@ -107,6 +108,11 @@ def _run_poisson(eng: ServeEngine, args) -> None:
     log.info("segments=%d slot-steps live=%d masked=%d admissions/slot=%s",
              st["segments"], st["slot_steps_live"], st["slot_steps_masked"],
              st["admissions_per_slot"])
+    if sched.paged:
+        log.info("paged KV: peak blocks %d/%d (block_len=%d), "
+                 "admissions deferred on full pool: %d",
+                 st["blocks_in_use_peak"], sched.n_blocks, sched.block_len,
+                 st["admit_deferred"])
 
 
 def main() -> None:
@@ -133,18 +139,39 @@ def main() -> None:
     ap.add_argument("--segment-len", type=int, default=16)
     ap.add_argument("--segment-mode", default="while",
                     choices=("scan", "while"))
+    ap.add_argument("--kv-layout", default="dense", choices=("dense", "paged"),
+                    help="slot-cache layout: dense max_len rows (default) or "
+                         "a paged block pool + block table")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="paged layout: tokens per KV block (must divide "
+                         "max_len — the launcher rounds max_len up)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="paged layout: allocatable pool blocks (default: "
+                         "dense-equivalent n_slots x max_len/block_len)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch, reduced=args.reduced)
     if arch.cfg.encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+    if args.kv_layout == "paged" and args.workload != "poisson":
+        raise SystemExit(
+            "--kv-layout paged only applies to the slot scheduler: "
+            "pass --workload poisson (the batch path always runs dense)"
+        )
+    if args.n_blocks is not None and args.kv_layout != "paged":
+        raise SystemExit("--n-blocks requires --kv-layout paged")
     plan = MeshPlan()
     params = arch.init_params(jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.new_tokens + 1
+    if args.kv_layout == "paged":  # virtual length must be whole blocks
+        max_len += (-max_len) % args.block_len
     sc = ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + 1,
+        max_len=max_len,
         temperature=args.temperature,
         loop=args.loop,
         eos_token=args.eos_token,
+        kv_layout=args.kv_layout,
+        block_len=args.block_len,
     )
     eng = ServeEngine(arch, params, plan, sc)
     if args.workload == "poisson":

@@ -245,6 +245,53 @@ def update_kv_cache(
     return _dus_batch(k_cache, k_new, pos), _dus_batch(v_cache, v_new, pos)
 
 
+# ---------------- paged KV cache (block pool + block table, serving) --------
+#
+# The paged layout stores KV in a fixed pool of ``(n_blocks, block_len, KH,
+# Dh)`` physical blocks shared by every slot; a ``(n_slots, max_blocks)``
+# int32 block table maps each slot's logical block j to a physical block id.
+# Physical blocks 0..n_slots−1 are per-slot SCRATCH blocks: slot s's
+# unmapped table entries point at block s, so masked/retired slots keep
+# flowing through the fixed-shape decode step without touching any live
+# request's blocks — and, because scratch ids are distinct per slot and the
+# allocator never maps one block to two slots, every decode-step write lands
+# at a unique (block, offset) pair.  That lets the scatter below carry
+# ``unique_indices=True``, which XLA lowers markedly faster than a
+# collision-safe scatter (and faster than the dense layout's per-row
+# dynamic_update_slice).  The gather rebuilds the per-slot virtual cache
+# ``(n_slots, max_blocks·block_len, KH, Dh)`` — with ``max_blocks·block_len
+# == max_len`` the attention shapes (and therefore the greedy outputs) are
+# bit-identical to the dense slot layout; positions past ``pos`` read
+# scratch/stale values but are masked to exact zeros, exactly as the dense
+# layout's stale rows are.
+
+
+def paged_cache_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """pool (n_blocks, block_len, KH, Dh), block_table (B, MB) int32 →
+    virtual per-slot cache (B, MB·block_len, KH, Dh)."""
+    g = jnp.take(pool, block_table, axis=0)  # (B, MB, bl, KH, Dh)
+    b, mb, bl = g.shape[:3]
+    return g.reshape(b, mb * bl, *g.shape[3:])
+
+
+def paged_cache_write(
+    pool: jax.Array,  # (n_blocks, block_len, KH, Dh)
+    block_table: jax.Array,  # (B, MB) int32
+    new: jax.Array,  # (B, 1, KH, Dh) — one decode token per slot
+    pos: jax.Array,  # (B,) logical write position per slot
+) -> jax.Array:
+    """Scatter one decode token per slot into its mapped physical block.
+
+    Slots whose mapping is unset write into their own scratch block (table
+    entry = the slot id, per the layout contract above), which is what makes
+    ``unique_indices`` sound: no two slots ever write the same (block,
+    offset) pair."""
+    bl = pool.shape[1]
+    phys = jnp.take_along_axis(block_table, (pos // bl)[:, None], axis=1)[:, 0]
+    return pool.at[phys, pos % bl].set(new[:, 0].astype(pool.dtype),
+                                       unique_indices=True)
+
+
 # -------- int8 KV cache (SONIC C2 applied to the cache — §Perf A2/C) --------
 
 
@@ -274,6 +321,7 @@ def attention_apply(
     cache: tuple[jax.Array, jax.Array] | None = None,
     cache_scales: tuple[jax.Array, jax.Array] | None = None,  # int8 cache mode
     cache_pos: jax.Array | None = None,  # (B,)
+    block_table: jax.Array | None = None,  # (B, MB) int32 — paged cache mode
     causal: bool = True,
 ) -> tuple[jax.Array, tuple | None]:
     """Full attention block (no norm/residual).  Returns (out, new_cache).
@@ -282,6 +330,9 @@ def attention_apply(
       * cache is None                    → train/encoder forward (no cache out).
       * cache given, S == prompt length  → prefill (writes cache at pos 0..S).
       * cache given, S == 1              → decode step at ``cache_pos``.
+      * block_table given                → paged decode: ``cache`` is a
+        (k_pool, v_pool) block pool; the new token scatters into the mapped
+        block and attention runs over the gathered virtual cache.
 
     Sharding (when ``plan`` has a mesh): q/k/v are constrained to head-sharded
     (or head_dim-sharded) layout over the TP axis; KV heads are replicated
@@ -324,6 +375,23 @@ def attention_apply(
             v = plan.constrain(v, *hspec)
 
     new_cache = None
+    if block_table is not None:
+        assert cache is not None and s == 1 and cache_pos is not None, (
+            "paged cache is a decode-only layout (prefill runs on a dense "
+            "batch-1 cache, then write_cache_block installs the blocks)"
+        )
+        assert cache_scales is None, "paged + int8 KV cache not supported"
+        k_pool, v_pool = cache
+        k_pool = paged_cache_write(k_pool, block_table, k, cache_pos)
+        v_pool = paged_cache_write(v_pool, block_table, v, cache_pos)
+        out = decode_attention(
+            q,
+            paged_cache_gather(k_pool, block_table),
+            paged_cache_gather(v_pool, block_table),
+            cache_pos,
+        )
+        out = dense_apply(p["wo"], out.reshape(b, s, h * dh))
+        return out, (k_pool, v_pool)
     if cache is None:
         pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
         out = flash_attention(q, k, v, pos2d, pos2d, causal=causal)

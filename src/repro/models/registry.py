@@ -8,7 +8,7 @@ NamedShardings when the plan has a mesh) for every model input of that
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +46,41 @@ class Arch:
                        cfg: ModelConfig | None = None):
         return jax.eval_shape(
             lambda: self.module.init_cache(cfg or self.cfg, batch, max_len, plan)
+        )
+
+    # -- paged KV (serving; see check_paged_cache_contract) -----------------
+    @property
+    def supports_paged_kv(self) -> bool:
+        return self.paged_skip_reason() == ""
+
+    def paged_skip_reason(self) -> str:
+        """'' when the family supports the paged-KV serving layout, else why
+        not (mirrors ``supports``'s skip-matrix style)."""
+        if self.cfg.encoder_only:
+            return "encoder-only arch has no decode step"
+        if not hasattr(self.module, "init_paged_cache"):
+            if self.cfg.rwkv_head_size:
+                return ("rwkv state is O(1) in sequence length — there is no "
+                        "growing KV cache to page")
+            if self.cfg.family == "hybrid":
+                return ("hybrid cache mixes attention KV with O(1) ssm/conv "
+                        "state; per-leaf paging not wired yet")
+            return f"{self.arch_id}: model family has no init_paged_cache"
+        return ""
+
+    def init_paged_cache(self, n_blocks: int, block_len: int, plan: MeshPlan,
+                         cfg: ModelConfig | None = None):
+        reason = self.paged_skip_reason()
+        if reason:
+            raise NotImplementedError(f"{self.arch_id}: {reason}")
+        return self.module.init_paged_cache(
+            cfg or self.cfg, n_blocks, block_len, plan
+        )
+
+    def abstract_paged_cache(self, n_blocks: int, block_len: int,
+                             plan: MeshPlan, cfg: ModelConfig | None = None):
+        return jax.eval_shape(
+            lambda: self.init_paged_cache(n_blocks, block_len, plan, cfg)
         )
 
     # -- shape support (DESIGN.md §4 skip matrix) ---------------------------
@@ -238,6 +273,111 @@ def check_slot_cache_contract(
         f"{arch.arch_id}: cache leaves whose batch dim is not axis "
         f"{CACHE_SLOT_AXIS}: {bad}"
     )
+
+
+CACHE_BLOCK_AXIS = 1  # paged pools put the physical-block axis where the
+#                       dense slot layout puts the slot axis
+
+
+def write_cache_block(cache, sub_cache, blocks):
+    """Install a batch-1 prefill cache into physical blocks of a paged pool.
+
+    ``sub_cache`` leaves are (L, 1, nb·block_len, KH, Dh) (a dense batch-1
+    cache whose length is padded up to whole blocks); ``blocks`` is the (nb,)
+    int32 vector of physical block ids the allocator mapped for the slot
+    (may be traced — the paged prefill program jits over it; ids are
+    distinct by the allocator contract, hence ``unique_indices``).  Each
+    leaf is reshaped into blocks and scattered onto axis
+    ``CACHE_BLOCK_AXIS`` of the pool; no other block is touched
+    (``check_paged_cache_contract``).
+    """
+    nb = blocks.shape[0]
+
+    def wr(full, one):
+        bl = full.shape[CACHE_BLOCK_AXIS + 1]
+        lead = one.shape[0]  # n_layers
+        assert one.shape[2] == nb * bl, (one.shape, nb, bl)
+        o = one[:, 0].reshape(lead, nb, bl, *one.shape[3:]).astype(full.dtype)
+        return full.at[:, blocks].set(o, unique_indices=True)
+
+    return jax.tree_util.tree_map(wr, cache, sub_cache)
+
+
+def check_paged_cache_contract(
+    arch: Arch,
+    n_slots: int = 2,
+    block_len: int = 4,
+    max_blocks: int = 3,
+    plan: MeshPlan | None = None,
+    cfg: ModelConfig | None = None,
+) -> None:
+    """Assert the paged-KV contract the serving stack relies on.  Pure
+    ``eval_shape`` — allocates nothing.  Raises NotImplementedError (with the
+    family's ``paged_skip_reason``) for unsupported cells, AssertionError
+    with leaf details on a structural violation.
+
+    Checked:
+      * pool leaves carry the block axis on ``CACHE_BLOCK_AXIS`` and the
+        in-block position axis right after it (diffed at two pool sizes);
+      * one paged decode step (forward with a block table) maps the pool
+        pytree to an *identical* pytree — the scan/donation carry contract.
+    """
+    plan = plan or MeshPlan()
+    cfg = cfg or arch.cfg
+    reason = arch.paged_skip_reason()
+    if reason:
+        raise NotImplementedError(f"{arch.arch_id}: {reason}")
+    a, b = 5, 7
+    la, ta = jax.tree_util.tree_flatten(
+        arch.abstract_paged_cache(a, block_len, plan, cfg))
+    lb, tb = jax.tree_util.tree_flatten(
+        arch.abstract_paged_cache(b, block_len, plan, cfg))
+    assert ta == tb, f"{arch.arch_id}: pool treedef depends on n_blocks"
+    bad = []
+    for i, (x, y) in enumerate(zip(la, lb)):
+        want = tuple(
+            b if d == CACHE_BLOCK_AXIS else s for d, s in enumerate(x.shape)
+        )
+        if (x.dtype != y.dtype or y.shape != want
+                or x.shape[CACHE_BLOCK_AXIS] != a
+                or x.shape[CACHE_BLOCK_AXIS + 1] != block_len):
+            bad.append((i, x.shape, y.shape))
+    assert not bad, (
+        f"{arch.arch_id}: pool leaves whose block axis is not axis "
+        f"{CACHE_BLOCK_AXIS} (or block_len not on axis "
+        f"{CACHE_BLOCK_AXIS + 1}): {bad}"
+    )
+
+    params = arch.abstract_params(cfg)
+    pool = arch.abstract_paged_cache(a, block_len, plan, cfg)
+    table = SDS((n_slots, max_blocks), jnp.int32)
+    pos = SDS((n_slots,), jnp.int32)
+    if arch.input_kind == "tokens":
+        kw = {"tokens": SDS((n_slots, 1), jnp.int32)}
+    else:
+        kw = {"embeds": SDS((n_slots, 1, cfg.d_model), jnp.bfloat16)}
+        if arch.input_kind == "embeds+mrope":
+            kw["positions"] = SDS((n_slots, 3, 1), jnp.int32)
+
+    def step(params, pool, pos, table, kw):
+        _, new_pool = arch.forward(
+            params, plan, cfg=cfg, cache=pool, cache_pos=pos,
+            block_table=table, **kw,
+        )
+        return new_pool
+
+    out = jax.eval_shape(step, params, pool, pos, table, kw)
+    in_leaves, in_tree = jax.tree_util.tree_flatten(pool)
+    out_leaves, out_tree = jax.tree_util.tree_flatten(out)
+    assert in_tree == out_tree, (
+        f"{arch.arch_id}: paged decode changed the pool treedef"
+    )
+    bad = [
+        (i, x.shape, x.dtype, y.shape, y.dtype)
+        for i, (x, y) in enumerate(zip(in_leaves, out_leaves))
+        if x.shape != y.shape or x.dtype != y.dtype
+    ]
+    assert not bad, f"{arch.arch_id}: paged decode changed pool leaf specs: {bad}"
 
 
 def cache_shardings(arch: Arch, cache_abs, plan: MeshPlan, cfg: ModelConfig):

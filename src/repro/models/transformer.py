@@ -11,7 +11,6 @@ during layer i's compute).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -71,6 +70,7 @@ def layer_apply(
     plan: MeshPlan,
     cache: tuple[jax.Array, jax.Array] | None = None,
     cache_pos: jax.Array | None = None,
+    block_table: jax.Array | None = None,
 ) -> tuple[jax.Array, tuple | None]:
     b, s, _ = x.shape
     seq = plan.tp if s > 1 else None  # SP only when the seq dim exists
@@ -86,6 +86,7 @@ def layer_apply(
         cache=cache_kv,
         cache_scales=cache_scales,
         cache_pos=cache_pos,
+        block_table=block_table,
         causal=not cfg.encoder_only,
     )
     # constrain the sublayer OUTPUT (a TP partial sum) before the residual
@@ -114,8 +115,13 @@ def trunk_apply(
     cache: dict | None = None,  # {"k": (L,B,S_max,KH,Dh), "v": ...}
     cache_pos: jax.Array | None = None,
     remat: bool = False,
+    block_table: jax.Array | None = None,  # paged: cache leaves are pools
 ) -> tuple[jax.Array, dict | None]:
-    """Scan the stacked layers.  Returns (hidden, new_cache)."""
+    """Scan the stacked layers.  Returns (hidden, new_cache).
+
+    With ``block_table`` the cache leaves are block pools
+    (L, n_blocks, block_len, KH, Dh); the table is shared across layers
+    (closed over by the scan body, not scanned)."""
 
     if cache is None:  # train / encoder forward
 
@@ -147,7 +153,8 @@ def trunk_apply(
                                    (kc, vc, ks, vs), cache_pos)
         else:
             lp, kc, vc = inp
-            x, new_c = layer_apply(lp, cfg, x, positions, plan, (kc, vc), cache_pos)
+            x, new_c = layer_apply(lp, cfg, x, positions, plan, (kc, vc),
+                                   cache_pos, block_table)
         return x, new_c
 
     if quant:
@@ -177,6 +184,7 @@ def forward(
     cache: dict | None = None,
     cache_pos: jax.Array | None = None,
     remat: bool = False,
+    block_table: jax.Array | None = None,  # paged-KV decode (serving)
 ) -> tuple[jax.Array, dict | None]:
     """→ (logits (B, S, V), new_cache)."""
     dtype = jnp.dtype(cfg.compute_dtype)
@@ -195,7 +203,7 @@ def forward(
     seq = plan.tp if s > 1 else None
     x = plan.constrain(x, plan.dp, seq, None)
     x, new_cache = trunk_apply(
-        params, cfg, x, positions, plan, cache, cache_pos, remat
+        params, cfg, x, positions, plan, cache, cache_pos, remat, block_table
     )
     x = L.norm_apply(params["final_norm"], x)
     if cfg.tie_embeddings:
@@ -223,6 +231,28 @@ def init_cache(
             "k_scale": jnp.zeros(shape[:-1], jnp.float32),
             "v_scale": jnp.zeros(shape[:-1], jnp.float32),
         }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_cache(
+    cfg: ModelConfig, n_blocks: int, block_len: int, plan: MeshPlan,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """Paged serving cache: a pool of KV blocks shared by every slot.
+
+    Leaves are (n_layers, n_blocks, block_len, KH, Dh) — the block axis sits
+    where the dense layout's slot axis does (``registry.CACHE_BLOCK_AXIS``),
+    so the scan-carry and write contracts transfer.  The serving layer
+    reserves the first ``n_slots`` physical blocks as per-slot scratch (see
+    ``layers.paged_cache_write``) and allocates the rest.  Same carry
+    contract as ``init_cache``: one paged decode step maps the pool pytree
+    to an identical pytree (``registry.check_paged_cache_contract``).
+    """
+    assert n_blocks >= 2 and block_len >= 1, (n_blocks, block_len)
+    if plan is not None and plan.cache_quant_int8:
+        raise NotImplementedError("paged KV + int8 cache quant not supported")
+    kh_eff = cfg.n_kv_heads * (plan.kv_repeat if plan else 1)
+    shape = (cfg.n_layers, n_blocks, block_len, kh_eff, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

@@ -1,9 +1,10 @@
 from repro.serve.engine import ServeEngine, ServeConfig
 from repro.serve.request import Request, SubmitRequest
 from repro.serve.sampling import sample_token
-from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.scheduler import BlockAllocator, ContinuousScheduler
 
 __all__ = [
+    "BlockAllocator",
     "ContinuousScheduler",
     "Request",
     "ServeConfig",

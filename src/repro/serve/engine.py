@@ -39,7 +39,11 @@ into one row of a fixed-capacity slot cache) and ``_slot_segment`` (a
 ``lax.scan`` of S masked decode steps over all slots, carry
 ``(cache, tok, pos, done, key)`` with per-slot ``active``/``limit`` inputs).
 Both donate the slot cache, so device state persists across segments without
-copies.  See docs/serving.md.
+copies.  Under ``ServeConfig.kv_layout="paged"`` the same two programs exist
+as paged twins (``_prefill_slot_paged`` / ``_slot_segment_paged`` /
+``_slot_segment_while_paged``) over a fixed block pool + host-policy block
+table instead of per-slot ``max_len`` rows — greedy outputs stay
+bit-identical to the dense slot path.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -65,25 +69,51 @@ class ServeConfig:
     eos_token: int = -1  # -1 ⇒ never stop early
     jit: bool = True
     loop: str = "scan"  # "scan" | "while" | "python"
+    # continuous-batching cache layout: "dense" = one max_len row per slot
+    # (PR 2); "paged" = fixed pool of block_len-sized KV blocks + block table
+    # (greedy outputs bit-identical; admission gated on free blocks).
+    kv_layout: str = "dense"  # "dense" | "paged"
+    block_len: int = 16
+
+
+_SLOT_PROGRAMS = ("prefill_slot", "slot_segment", "slot_segment_while",
+                  "prefill_slot_paged", "slot_segment_paged",
+                  "slot_segment_while_paged")
 
 
 class ServeEngine:
     def __init__(self, arch, params, plan: MeshPlan, sc: ServeConfig, cfg=None):
         assert sc.loop in ("scan", "while", "python"), sc.loop
+        assert sc.kv_layout in ("dense", "paged"), sc.kv_layout
+        if sc.kv_layout == "paged":
+            # max_blocks·block_len == max_len keeps the gathered virtual
+            # cache the exact shape of the dense slot row — the bit-identical
+            # greedy contract depends on it (see docs/serving.md)
+            assert sc.max_len % sc.block_len == 0, (
+                f"max_len {sc.max_len} not a multiple of block_len "
+                f"{sc.block_len}"
+            )
+            # single-device only for now: the paged branch does not apply
+            # plan.cache_spec() constraints, so under a mesh GSPMD would be
+            # free to replicate the pool — defeating the memory ceiling
+            assert plan.mesh is None, (
+                "kv_layout='paged' is not wired for meshed serving yet "
+                "(pool sharding constraints missing — see ROADMAP)"
+            )
         self.arch, self.params, self.plan, self.sc = arch, params, plan, sc
         self.cfg = cfg or arch.cfg
         # traced / called counters: tests assert no-recompile and
         # one-program-per-loop from these.
-        self.trace_counts: dict[str, int] = {"prefill": 0, "decode": 0,
-                                             "decode_loop": 0,
-                                             "prefill_slot": 0,
-                                             "slot_segment": 0,
-                                             "slot_segment_while": 0}
-        self.call_counts: dict[str, int] = {"prefill": 0, "decode": 0,
-                                            "decode_loop": 0,
-                                            "prefill_slot": 0,
-                                            "slot_segment": 0,
-                                            "slot_segment_while": 0}
+        self.trace_counts: dict[str, int] = {
+            k: 0 for k in ("prefill", "decode", "decode_loop", *_SLOT_PROGRAMS)
+        }
+        self.call_counts: dict[str, int] = {
+            k: 0 for k in ("prefill", "decode", "decode_loop", *_SLOT_PROGRAMS)
+        }
+        # cache-contract checks run once per engine, not per scheduler: the
+        # paged check eval_shape-traces a full forward, which would otherwise
+        # tax every scheduler construction (visible in serve_paged timings)
+        self._checked_contracts: set[str] = set()
 
         def sample(logits, key):
             return sample_token(logits, key, sc.temperature, sc.top_k, sc.top_p)
@@ -192,7 +222,8 @@ class ServeEngine:
                 first,
             )
 
-        def slot_step(params, cache, tok, pos, done, key, active, limit):
+        def slot_step(params, cache, tok, pos, done, key, active, limit,
+                      block_table=None):
             """One masked decode step over all slots (shared by both segment
             flavours — the scan/while bit-identical contract depends on it).
 
@@ -202,12 +233,16 @@ class ServeEngine:
             emitted entry is −1 so the host scheduler drops it.  Live slots
             follow the exact PR 1 step semantics (eos-check then pin), so
             greedy outputs are bit-identical to ``generate`` on a uniform
-            workload.
+            workload.  With ``block_table`` the cache is a paged pool;
+            masked slots' frozen-pos writes land in their own mapped block
+            (done-but-active) or the scratch block (retired/empty rows are
+            zeroed by the scheduler), so no live block is ever clobbered.
             """
             key, sub = jax.random.split(key)
+            fkw = {} if block_table is None else {"block_table": block_table}
             logits, cache = arch.forward(
                 params, plan, cfg=self.cfg, tokens=tok[:, None],
-                cache=cache, cache_pos=pos,
+                cache=cache, cache_pos=pos, **fkw,
             )
             nxt = sample(logits[:, 0], sub)
             live = active & ~done
@@ -219,20 +254,14 @@ class ServeEngine:
             done = done | (active & (pos >= limit))
             return cache, tok, pos, done, key, emitted
 
-        def slot_segment(n_steps, params, cache, tok, pos, done, key,
-                         active, limit):
-            """Run ``n_steps`` decode steps over every slot (fixed capacity).
-
-            Carry on device: (cache, tok, pos, done, key); ``active`` (slot
-            holds a live request — host-owned, retirement clears it) and
-            ``limit`` (last write position = prompt_len + max_new − 1) are
-            per-slot segment inputs.  Step semantics: ``slot_step``.
-            """
-            self.trace_counts["slot_segment"] += 1
+        def segment_scan_impl(n_steps, params, cache, tok, pos, done, key,
+                              active, limit, block_table):
+            """Shared body of the dense/paged scan segments — one place to
+            change segment semantics, so the layouts cannot drift apart."""
 
             def body(carry, _):
                 cache, tok, pos, done, key, emitted = slot_step(
-                    params, *carry, active, limit
+                    params, *carry, active, limit, block_table
                 )
                 return (cache, tok, pos, done, key), emitted
 
@@ -241,9 +270,9 @@ class ServeEngine:
             )
             return toks.T, cache, tok, pos, done, key  # toks (n_slots, S)
 
-        def slot_segment_while(n_steps, params, cache, tok, pos, done, key,
-                               active, limit, stop_on_free):
-            """``slot_segment`` with a ``lax.while_loop`` and early exit.
+        def segment_while_impl(n_steps, params, cache, tok, pos, done, key,
+                               active, limit, stop_on_free, block_table):
+            """Shared body of the dense/paged while segments (early exit).
 
             Same per-step math (``slot_step``, so greedy outputs are
             bit-identical to the scan segment), but the loop stops as soon
@@ -254,7 +283,6 @@ class ServeEngine:
             segment masked.  ``n_steps`` is the cap / output width; untaken
             columns come back as −1.
             """
-            self.trace_counts["slot_segment_while"] += 1
             n_slots = tok.shape[0]
             out0 = jnp.full((n_slots, n_steps), -1, jnp.int32)
 
@@ -267,7 +295,8 @@ class ServeEngine:
             def loop_body(st):
                 i, cache, tok, pos, done, key, out = st
                 cache, tok, pos, done, key, emitted = slot_step(
-                    params, cache, tok, pos, done, key, active, limit
+                    params, cache, tok, pos, done, key, active, limit,
+                    block_table,
                 )
                 out = jax.lax.dynamic_update_slice(out, emitted[:, None], (0, i))
                 return i + 1, cache, tok, pos, done, key, out
@@ -278,6 +307,82 @@ class ServeEngine:
             )
             _, cache, tok, pos, done, key, out = st
             return out, cache, tok, pos, done, key
+
+        def slot_segment(n_steps, params, cache, tok, pos, done, key,
+                         active, limit):
+            """Run ``n_steps`` decode steps over every slot (fixed capacity).
+
+            Carry on device: (cache, tok, pos, done, key); ``active`` (slot
+            holds a live request — host-owned, retirement clears it) and
+            ``limit`` (last write position = prompt_len + max_new − 1) are
+            per-slot segment inputs.  Step semantics: ``slot_step``.
+            """
+            self.trace_counts["slot_segment"] += 1
+            return segment_scan_impl(n_steps, params, cache, tok, pos, done,
+                                     key, active, limit, None)
+
+        def slot_segment_while(n_steps, params, cache, tok, pos, done, key,
+                               active, limit, stop_on_free):
+            """Early-exit segment over the dense slot cache
+            (``segment_while_impl``)."""
+            self.trace_counts["slot_segment_while"] += 1
+            return segment_while_impl(n_steps, params, cache, tok, pos, done,
+                                      key, active, limit, stop_on_free, None)
+
+        # ------------- paged slot programs (kv_layout="paged", scheduler.py)
+        #
+        # Same admit/segment/retire machine over a block pool instead of
+        # per-slot max_len rows: prefill runs on a dense batch-1 cache padded
+        # to whole blocks and ``write_cache_block`` scatters it into the
+        # slot's mapped physical blocks; decode steps scatter one token into
+        # the mapped block and attend over the gathered virtual cache
+        # (``layers.paged_cache_*``).  The block table is host policy like
+        # ``active``/``limit`` — uploaded per call, never part of the carry.
+
+        def prefill_slot_paged(params, pool, tok, pos, done, prompt, slot,
+                               bt_row, key):
+            """Paged twin of ``prefill_slot``: prefill ONE request and
+            install its KV into the physical blocks ``bt_row[:nb]`` maps.
+
+            The batch-1 prefill cache is allocated at the prompt length
+            padded up to whole blocks (positions past the prompt hold zeros
+            until decode overwrites them — always masked until then), so one
+            trace per distinct prompt length, exactly like the dense path.
+            """
+            self.trace_counts["prefill_slot_paged"] += 1
+            from repro.models.registry import write_cache_block
+
+            bl = sc.block_len
+            p_len = prompt.shape[1]
+            nb = -(-p_len // bl)  # ceil — static per trace
+            small = arch.init_cache(1, nb * bl, plan, cfg=self.cfg)
+            logits, small = arch.forward(
+                params, plan, cfg=self.cfg, tokens=prompt, cache=small
+            )
+            first = sample(logits[:, -1], key)[0]
+            return (
+                write_cache_block(pool, small, bt_row[:nb]),
+                tok.at[slot].set(first),
+                pos.at[slot].set(p_len),
+                done.at[slot].set(False),
+                first,
+            )
+
+        def slot_segment_paged(n_steps, params, pool, tok, pos, done, key,
+                               active, limit, block_table):
+            """``slot_segment`` over a paged pool (same step math)."""
+            self.trace_counts["slot_segment_paged"] += 1
+            return segment_scan_impl(n_steps, params, pool, tok, pos, done,
+                                     key, active, limit, block_table)
+
+        def slot_segment_while_paged(n_steps, params, pool, tok, pos, done,
+                                     key, active, limit, stop_on_free,
+                                     block_table):
+            """``slot_segment_while`` over a paged pool (same exit rule)."""
+            self.trace_counts["slot_segment_while_paged"] += 1
+            return segment_while_impl(n_steps, params, pool, tok, pos, done,
+                                      key, active, limit, stop_on_free,
+                                      block_table)
 
         if sc.jit:
             self._prefill = jax.jit(prefill)
@@ -300,6 +405,17 @@ class ServeEngine:
                 slot_segment_while, static_argnums=(0,),
                 donate_argnums=(2, 3, 4, 5),
             )
+            self._prefill_slot_paged = jax.jit(
+                prefill_slot_paged, donate_argnums=(1, 2, 3, 4)
+            )
+            self._slot_segment_paged = jax.jit(
+                slot_segment_paged, static_argnums=(0,),
+                donate_argnums=(2, 3, 4, 5),
+            )
+            self._slot_segment_while_paged = jax.jit(
+                slot_segment_while_paged, static_argnums=(0,),
+                donate_argnums=(2, 3, 4, 5),
+            )
         else:
             self._prefill, self._decode = prefill, decode
             self._decode_loop = (
@@ -307,6 +423,9 @@ class ServeEngine:
             )
             self._prefill_slot, self._slot_segment = prefill_slot, slot_segment
             self._slot_segment_while = slot_segment_while
+            self._prefill_slot_paged = prefill_slot_paged
+            self._slot_segment_paged = slot_segment_paged
+            self._slot_segment_while_paged = slot_segment_while_paged
 
     # ------------------------------------------------------------- public
 
@@ -316,9 +435,32 @@ class ServeEngine:
         once (cheap, eval_shape only) before allocating."""
         from repro.models.registry import check_slot_cache_contract
 
-        check_slot_cache_contract(self.arch, plan=self.plan, cfg=self.cfg)
+        if "slot" not in self._checked_contracts:
+            check_slot_cache_contract(self.arch, plan=self.plan, cfg=self.cfg)
+            self._checked_contracts.add("slot")
         return self.arch.init_cache(n_slots, self.sc.max_len, self.plan,
                                     cfg=self.cfg)
+
+    @property
+    def max_blocks_per_slot(self) -> int:
+        """Logical blocks a slot can address = max_len / block_len (the
+        gathered virtual cache is exactly max_len long — bit-identicality)."""
+        return self.sc.max_len // self.sc.block_len
+
+    def init_paged_cache(self, n_blocks: int, n_slots: int = 1):
+        """Fresh paged KV pool with ``n_blocks`` allocatable blocks plus
+        ``n_slots`` per-slot scratch blocks (physical ids 0..n_slots−1) that
+        slot s's unmapped table entries point at — distinct scratch targets
+        are what make the decode write a ``unique_indices`` scatter.
+        Verifies the paged contract once (cheap, eval_shape only)."""
+        from repro.models.registry import check_paged_cache_contract
+
+        if "paged" not in self._checked_contracts:
+            check_paged_cache_contract(self.arch, plan=self.plan, cfg=self.cfg)
+            self._checked_contracts.add("paged")
+        return self.arch.init_paged_cache(
+            n_slots + n_blocks, self.sc.block_len, self.plan, cfg=self.cfg
+        )
 
     def generate(
         self, prompts: jax.Array, n_new: int, key: jax.Array | None = None

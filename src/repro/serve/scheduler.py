@@ -30,6 +30,23 @@ Between compiled segments the host scheduler:
 Uniform workloads reproduce ``ServeEngine.generate`` bit-identically under
 greedy decoding (tests/test_serve_scheduler.py); mixed workloads win
 throughput by replacing dead padded rows with live requests.
+
+Paged KV layout (``ServeConfig.kv_layout="paged"``): the slot cache becomes
+a fixed pool of ``block_len``-sized KV blocks plus a host-owned
+``(n_slots, max_blocks_per_slot)`` block table uploaded with each program
+call (like ``active``/``limit``).  ``BlockAllocator`` is the free-list:
+admission maps ``ceil((prompt_len + max_new) / block_len)`` physical blocks
+up front and DEFERS (queue order preserved) when the pool can't cover the
+head request — blocks free up at retirement, so a deferred head always
+admits eventually (``submit`` rejects requests that could never fit).
+Retirement returns the blocks and points the slot's table row back at its
+own scratch block (physical ids 0..n_slots−1 are per-slot scratch), so the
+retired slot's masked frozen-pos writes land in scratch instead of a block
+the next tenant may own — and, scratch being per-slot, every decode write
+has a unique (block, offset) target (``layers.paged_cache_write`` exploits
+this with a ``unique_indices`` scatter).  Greedy outputs are bit-identical
+to the dense slot layout; the win is the memory ceiling — pool bytes track
+the live-context sum, not ``n_slots × max_len``.
 """
 from __future__ import annotations
 
@@ -48,6 +65,53 @@ from repro.utils.logging import get_logger
 log = get_logger("serve.scheduler")
 
 
+class BlockAllocator:
+    """Host-side free-list over physical KV blocks ``first_block`` ..
+    ``first_block + n_blocks − 1`` (ids below ``first_block`` are the
+    per-slot scratch blocks and are never allocated).
+
+    Blocks are interchangeable, so there is no fragmentation: ``alloc``
+    succeeds iff enough blocks are free.  ``mapped`` tracks slot → blocks so
+    the stress suite can assert the no-double-mapping invariant after every
+    segment (``ContinuousScheduler.check_block_invariants``).
+    """
+
+    def __init__(self, n_blocks: int, first_block: int = 1):
+        assert n_blocks >= 1 and first_block >= 1, (n_blocks, first_block)
+        self.capacity = n_blocks
+        self.first_block = first_block
+        self.free: collections.deque[int] = collections.deque(
+            range(first_block, first_block + n_blocks)
+        )
+        self.mapped: dict[int, list[int]] = {}  # slot -> physical block ids
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_mapped(self) -> int:
+        return sum(len(b) for b in self.mapped.values())
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self.free)
+
+    def alloc(self, slot: int, n: int) -> list[int]:
+        """Map ``n`` blocks to ``slot``; raises if it already holds blocks
+        or the pool is short (callers gate on ``can_alloc``)."""
+        assert slot not in self.mapped, f"slot {slot} already mapped"
+        assert self.can_alloc(n), (n, len(self.free))
+        blocks = [self.free.popleft() for _ in range(n)]
+        self.mapped[slot] = blocks
+        return blocks
+
+    def release(self, slot: int) -> list[int]:
+        """Unmap and return all of ``slot``'s blocks to the free list."""
+        blocks = self.mapped.pop(slot)
+        self.free.extend(blocks)
+        return blocks
+
+
 class ContinuousScheduler:
     def __init__(
         self,
@@ -56,6 +120,7 @@ class ContinuousScheduler:
         segment_len: int = 8,
         segment_mode: str | None = None,
         seed: int = 0,
+        n_blocks: int | None = None,
         clock: Callable[[], float] = time.perf_counter,
     ):
         assert n_slots >= 1 and segment_len >= 1, (n_slots, segment_len)
@@ -74,8 +139,27 @@ class ContinuousScheduler:
         self.clock = clock
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * n_slots
+        self.paged = engine.sc.kv_layout == "paged"
+        if self.paged:
+            self.block_len = engine.sc.block_len
+            self.max_blocks = engine.max_blocks_per_slot
+            # default pool = dense-equivalent capacity; callers shrink it to
+            # actually reclaim memory (admission then gates on free blocks)
+            self.n_blocks = (n_blocks if n_blocks is not None
+                             else n_slots * self.max_blocks)
+            self.allocator = BlockAllocator(self.n_blocks, first_block=n_slots)
+            # host-owned block table, uploaded with each paged program call;
+            # slot s's unmapped entries point at its own scratch block s
+            # (what makes the decode write a unique_indices scatter)
+            self.block_table = np.repeat(
+                np.arange(n_slots, dtype=np.int32)[:, None],
+                self.max_blocks, axis=1,
+            )
+            self.cache = engine.init_paged_cache(self.n_blocks, n_slots)
+        else:
+            assert n_blocks is None, "n_blocks only applies to kv_layout=paged"
+            self.cache = engine.init_slot_cache(n_slots)
         # device-resident slot state (donated through every program call)
-        self.cache = engine.init_slot_cache(n_slots)
         self.tok = jnp.zeros(n_slots, jnp.int32)
         self.pos = jnp.zeros(n_slots, jnp.int32)
         self.done = jnp.zeros(n_slots, bool)
@@ -92,7 +176,52 @@ class ContinuousScheduler:
             "slot_steps_live": 0,
             "slot_steps_masked": 0,
             "admissions_per_slot": [0] * n_slots,
+            "admit_deferred": 0,
+            "blocks_in_use_peak": 0,
         }
+
+    # -------------------------------------------------------------- paged
+
+    def _blocks_for(self, req: Request) -> int:
+        """Physical blocks a request needs for its whole lifetime: write
+        positions run 0..prompt_len+max_new−1 (all mapped at admission)."""
+        total = req.prompt_len + req.max_new_tokens
+        return -(-total // self.block_len)
+
+    def _release_blocks(self, slot: int) -> None:
+        """Free a slot's blocks and point its table row back at its scratch
+        block, so the retired slot's masked frozen-pos writes land in
+        scratch instead of a freed block the next tenant may be handed."""
+        self.allocator.release(slot)
+        self.block_table[slot] = slot
+
+    def check_block_invariants(self) -> None:
+        """Allocator/table invariants (stress suite runs this after every
+        segment): no block mapped twice, scratch never mapped, free+mapped
+        partitions the pool, table rows mirror the allocator exactly."""
+        if not self.paged:
+            return
+        alc = self.allocator
+        mapped = [b for blocks in alc.mapped.values() for b in blocks]
+        assert len(mapped) == len(set(mapped)), "block mapped to two slots"
+        assert all(b >= alc.first_block for b in mapped), "scratch block mapped"
+        free = list(alc.free)
+        assert len(free) == len(set(free)), "duplicate free block"
+        assert not (set(free) & set(mapped)), "block both free and mapped"
+        pool = set(range(alc.first_block, alc.first_block + alc.capacity))
+        assert set(free) | set(mapped) == pool, "free ∪ mapped ≠ pool"
+        live = {s for s in range(self.n_slots) if self.slots[s] is not None}
+        assert set(alc.mapped) == live, (
+            f"mapped slots {sorted(alc.mapped)} ≠ live slots {sorted(live)}"
+        )
+        for slot in range(self.n_slots):
+            row = self.block_table[slot]
+            if slot in alc.mapped:
+                nb = len(alc.mapped[slot])
+                assert list(row[:nb]) == alc.mapped[slot], (slot, row)
+                assert (row[nb:] == slot).all(), (slot, row)
+            else:
+                assert (row == slot).all(), f"unmapped slot {slot} bad row"
 
     # ------------------------------------------------------------- submit
 
@@ -122,6 +251,13 @@ class ContinuousScheduler:
             on_token=sub.on_token,
             submit_t=self.clock(),
         )
+        if self.paged:
+            # liveness guard: a head request the pool can never satisfy
+            # would defer admission forever once all slots drain
+            assert self._blocks_for(req) <= self.allocator.capacity, (
+                f"request needs {self._blocks_for(req)} blocks but the pool "
+                f"has {self.allocator.capacity}"
+            )
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -131,24 +267,65 @@ class ContinuousScheduler:
     def _admit(self) -> int:
         """Fill every free slot from the queue (prefill-into-slot).  All
         prefills dispatch first; first tokens stream after ONE bundled
-        device fetch."""
+        device fetch.
+
+        Paged layout: each admission first maps the request's whole block
+        budget.  When the free list can't cover the QUEUE HEAD, admission
+        stops for this round (FIFO preserved — skipping the head would
+        starve long requests); segments keep running, retirements return
+        blocks, and the head admits on a later round.  1-token requests
+        release their blocks as soon as their prefill is dispatched — the
+        written KV is never read, so a same-round reuse of those blocks is
+        safe (device executes the prefills in dispatch order).
+        """
         eng = self.engine
         pending: list[tuple[Request, int, jax.Array]] = []
+        deferred = False
         for slot in range(self.n_slots):
+            if deferred:
+                break
             while self.slots[slot] is None and self.queue:
-                req = self.queue.popleft()
-                self.key, sub = jax.random.split(self.key)
-                self.cache, self.tok, self.pos, self.done, first = (
-                    eng._prefill_slot(
-                        eng.params, self.cache, self.tok, self.pos, self.done,
-                        jnp.asarray(req.prompt)[None, :], jnp.int32(slot), sub,
+                req = self.queue[0]
+                if self.paged:
+                    nb = self._blocks_for(req)
+                    if not self.allocator.can_alloc(nb):
+                        self.stats["admit_deferred"] += 1
+                        deferred = True
+                        break
+                    blocks = self.allocator.alloc(slot, nb)
+                    self.block_table[slot, :nb] = blocks
+                    self.block_table[slot, nb:] = slot
+                    self.stats["blocks_in_use_peak"] = max(
+                        self.stats["blocks_in_use_peak"],
+                        self.allocator.n_mapped,
                     )
-                )
-                eng.call_counts["prefill_slot"] += 1
+                self.queue.popleft()
+                self.key, sub = jax.random.split(self.key)
+                if self.paged:
+                    self.cache, self.tok, self.pos, self.done, first = (
+                        eng._prefill_slot_paged(
+                            eng.params, self.cache, self.tok, self.pos,
+                            self.done, jnp.asarray(req.prompt)[None, :],
+                            jnp.int32(slot),
+                            jnp.asarray(self.block_table[slot]), sub,
+                        )
+                    )
+                    eng.call_counts["prefill_slot_paged"] += 1
+                else:
+                    self.cache, self.tok, self.pos, self.done, first = (
+                        eng._prefill_slot(
+                            eng.params, self.cache, self.tok, self.pos,
+                            self.done, jnp.asarray(req.prompt)[None, :],
+                            jnp.int32(slot), sub,
+                        )
+                    )
+                    eng.call_counts["prefill_slot"] += 1
                 pending.append((req, slot, first))
                 self.stats["admitted"] += 1
                 self.stats["admissions_per_slot"][slot] += 1
                 if req.max_new_tokens <= 1:  # prefill token is the budget:
+                    if self.paged:  # never decoded → KV never read
+                        self._release_blocks(slot)
                     continue  # finished below; slot stays free — refill it
                 req.state = RUNNING
                 self.slots[slot] = req
@@ -177,25 +354,28 @@ class ContinuousScheduler:
         if not self.active.any():
             return 0
         eng = self.engine
+        base = (self.segment_len, eng.params, self.cache,
+                self.tok, self.pos, self.done, self.key,
+                jnp.asarray(self.active), jnp.asarray(self.limit))
         if self.segment_mode == "while":
-            toks, self.cache, self.tok, self.pos, self.done, self.key = (
-                eng._slot_segment_while(
-                    self.segment_len, eng.params, self.cache,
-                    self.tok, self.pos, self.done, self.key,
-                    jnp.asarray(self.active), jnp.asarray(self.limit),
-                    jnp.bool_(bool(self.queue)),
-                )
-            )
-            eng.call_counts["slot_segment_while"] += 1
+            args = (*base, jnp.bool_(bool(self.queue)))
+            if self.paged:
+                seg_fn, seg_key = (eng._slot_segment_while_paged,
+                                   "slot_segment_while_paged")
+                args = (*args, jnp.asarray(self.block_table))
+            else:
+                seg_fn, seg_key = eng._slot_segment_while, "slot_segment_while"
         else:
-            toks, self.cache, self.tok, self.pos, self.done, self.key = (
-                eng._slot_segment(
-                    self.segment_len, eng.params, self.cache,
-                    self.tok, self.pos, self.done, self.key,
-                    jnp.asarray(self.active), jnp.asarray(self.limit),
-                )
-            )
-            eng.call_counts["slot_segment"] += 1
+            args = base
+            if self.paged:
+                seg_fn, seg_key = eng._slot_segment_paged, "slot_segment_paged"
+                args = (*args, jnp.asarray(self.block_table))
+            else:
+                seg_fn, seg_key = eng._slot_segment, "slot_segment"
+        toks, self.cache, self.tok, self.pos, self.done, self.key = (
+            seg_fn(*args)
+        )
+        eng.call_counts[seg_key] += 1
         toks = np.asarray(toks)  # the only per-segment download
         self.stats["segments"] += 1
         # steps actually executed: every executed step has ≥1 live emission
@@ -223,6 +403,8 @@ class ContinuousScheduler:
                 req.finish_t = now
                 self.slots[slot] = None
                 self.active[slot] = False
+                if self.paged:
+                    self._release_blocks(slot)
                 self.stats["retired"] += 1
         return sum(r is not None for r in self.slots)
 

@@ -1,0 +1,56 @@
+"""Unit tests for the paged-KV ``BlockAllocator`` (host free-list): alloc /
+release bookkeeping, exhaustion, and the scratch-range reservation.  The
+scheduler-level behaviors built on it (deferral, no-deadlock, per-segment
+invariants) are covered in test_serve_paged.py / test_serve_stress.py."""
+import pytest
+
+from repro.serve import BlockAllocator
+
+
+def test_alloc_release_roundtrip():
+    alc = BlockAllocator(6, first_block=2)
+    a = alc.alloc(0, 3)
+    b = alc.alloc(1, 2)
+    assert len(set(a) | set(b)) == 5  # all distinct
+    assert all(blk >= 2 for blk in a + b)  # scratch range untouched
+    assert alc.n_free == 1 and alc.n_mapped == 5
+    freed = alc.release(0)
+    assert sorted(freed) == sorted(a)
+    assert alc.n_free == 4 and alc.n_mapped == 2
+    alc.release(1)
+    assert alc.n_free == alc.capacity == 6
+    assert not alc.mapped
+
+
+def test_exhaustion_gates_can_alloc():
+    alc = BlockAllocator(4)
+    assert alc.can_alloc(4) and not alc.can_alloc(5)
+    alc.alloc(0, 3)
+    assert alc.can_alloc(1) and not alc.can_alloc(2)
+    with pytest.raises(AssertionError):
+        alc.alloc(1, 2)  # more than free
+    alc.release(0)
+    assert alc.can_alloc(4)
+
+
+def test_double_map_rejected():
+    alc = BlockAllocator(4)
+    alc.alloc(0, 1)
+    with pytest.raises(AssertionError):
+        alc.alloc(0, 1)  # slot already holds blocks
+
+
+def test_release_unmapped_slot_raises():
+    alc = BlockAllocator(4)
+    with pytest.raises(KeyError):
+        alc.release(3)
+
+
+def test_blocks_recycle_in_fifo_order():
+    """Freed blocks go to the back of the free list — a just-freed block is
+    reused last, maximizing the gap between a retirement and any reuse."""
+    alc = BlockAllocator(3, first_block=1)
+    first = alc.alloc(0, 1)
+    alc.release(0)
+    others = alc.alloc(1, 2)
+    assert first[0] not in others

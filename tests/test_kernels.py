@@ -172,3 +172,87 @@ def test_gradients_flow_through_fallback_paths():
 
     g = jax.grad(loss)(x)
     assert g.shape == x.shape and not bool(jnp.isnan(g).any())
+
+
+# ------------------------------------------- decode-edge property sweeps
+#
+# ISSUE 3 satellite: kernel/ref equivalence at the shapes the paged serving
+# decode path actually produces — M=1 rows, K/N that are not multiples of
+# the 128-default tile, all-zero activation rows, and the density extremes
+# (sparsity 0 keeps every block; sparsity→1 keeps the enforced minimum of
+# one K-block per N-block).
+
+
+@pytest.mark.parametrize("k,n,block", [
+    (192, 320, (64, 64)),   # K/N not multiples of the 128 default
+    (96, 128, (32, 64)),    # rectangular blocks
+    (128, 384, (64, 128)),
+])
+@pytest.mark.parametrize("sp", [0.0, 0.5, 0.95])
+def test_sonic_matvec_m1_offblock_shapes_and_density_extremes(k, n, block, sp):
+    """M=1 (the decode row) through the matvec kernel at awkward K/N and
+    both density extremes stays exact vs the oracle."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+    sw = make_sonic_weight(w, sparsity=sp, block=block, num_clusters=16)
+    if sp >= 0.95:  # balanced pruning floors at one kept K-block per N-block
+        assert sw.indices.shape[1] == 1
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, k))
+    got = sonic_matvec(x, sw)
+    want = sonic_matvec_ref(x, sw.idx_values, sw.codebook, sw.indices,
+                            sw.k_blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sonic_matvec_all_zero_row_is_exactly_zero():
+    """A fully-masked decode row (e.g. an eos-pinned slot with zeroed
+    hidden state) must produce exactly 0.0, not accumulated noise."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    sw = make_sonic_weight(w, sparsity=0.5, block=(32, 32), num_clusters=16)
+    x = jnp.zeros((2, 128))
+    got = np.asarray(sonic_matvec(x, sw))
+    assert got.shape == (2, 128)
+    assert (got == 0.0).all()
+
+
+@pytest.mark.parametrize("b,k,n,knz", [
+    (1, 100, 384, 1),    # M=1, single surviving activation, off-tile N
+    (1, 64, 200, 64),    # dense survivor set (density 1), N % 128 != 0
+    (3, 50, 96, 17),     # nothing a multiple of anything
+])
+def test_sparse_matvec_decode_edge_shapes(b, k, n, knz):
+    wt = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+    idx = jnp.sort(
+        jax.random.permutation(jax.random.PRNGKey(2), k)[:knz]
+    ).astype(jnp.int32)
+    x_nz = jax.random.normal(jax.random.PRNGKey(3), (b, knz))
+    got = sparse_matvec(x_nz, idx, wt)
+    want = sparse_matvec_ref(x_nz, idx, wt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sparse_matvec_all_zero_rows_and_weights():
+    wt = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    idx = jnp.arange(16, dtype=jnp.int32)
+    assert (np.asarray(sparse_matvec(jnp.zeros((2, 16)), idx, wt)) == 0).all()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    assert (np.asarray(sparse_matvec(x, idx, jnp.zeros((64, 128)))) == 0).all()
+
+
+@pytest.mark.parametrize("frac", [0.0, 1.0])
+def test_topk_sparse_matmul_density_extremes(frac):
+    """k = K reproduces the dense product exactly; k = 1 keeps only the
+    single largest-magnitude column (still equal to the masked product)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 96))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (96, 160))
+    k = max(int(96 * frac), 1)
+    got = np.asarray(topk_sparse_matmul(x, wt, k=k))
+    if frac == 1.0:
+        want = np.asarray(x @ wt)
+    else:
+        keep = int(jnp.argmax(jnp.abs(x[0])))
+        xm = np.zeros_like(np.asarray(x))
+        xm[0, keep] = np.asarray(x)[0, keep]
+        want = xm @ np.asarray(wt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

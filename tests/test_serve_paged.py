@@ -1,0 +1,181 @@
+"""Paged KV cache (ISSUE 3 acceptance tests): bit-identical greedy outputs
+vs the dense slot layout, block-gated admission (deferral, no deadlock),
+per-family paged-cache contract, and the no-retrace guarantee for the paged
+slot programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ALL_ARCH_IDS
+from repro.models.registry import check_paged_cache_contract, get_arch
+from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine
+from repro.sharding.mesh import MeshPlan
+
+PLAN = MeshPlan()
+MAX_LEN, BLOCK_LEN = 64, 8
+
+
+@pytest.fixture(scope="module")
+def arch_params():
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    return arch, params
+
+
+def _engine(arch_params, layout="paged", **kw):
+    arch, params = arch_params
+    sc = ServeConfig(max_len=MAX_LEN, kv_layout=layout,
+                     block_len=BLOCK_LEN, **kw)
+    return ServeEngine(arch, params, PLAN, sc)
+
+
+def _prompt(seed, length):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (length,), 0, 256),
+        np.int32,
+    )
+
+
+# ------------------------------------------------- bit-identical vs dense
+
+
+@pytest.mark.parametrize("mode", ["scan", "while"])
+def test_uniform_workload_bit_identical_to_static_engine(arch_params, mode):
+    """Greedy outputs through the PAGED scheduler equal the static engine's
+    bit-for-bit — same contract the dense slot layout upholds."""
+    prompts = jnp.stack([jnp.asarray(_prompt(i, 8)) for i in range(6)])
+    want = np.asarray(_engine(arch_params, "dense").generate(prompts, 10))
+    sched = ContinuousScheduler(
+        _engine(arch_params), n_slots=3, segment_len=4, segment_mode=mode
+    )
+    handles = [sched.submit(np.asarray(prompts[i]), 10) for i in range(6)]
+    sched.run()
+    got = np.stack([h.tokens for h in handles])
+    np.testing.assert_array_equal(got, want, err_msg=mode)
+    assert all(h.done for h in handles)
+
+
+def test_ragged_workload_matches_dense_scheduler(arch_params):
+    """Ragged prompts/budgets (incl. a 1-token request): paged and dense
+    schedulers emit identical streams request-by-request."""
+    lens = [4, 7, 11, 5, 9, 3]
+    news = [6, 12, 3, 1, 9, 14]
+    scheds = {
+        layout: ContinuousScheduler(
+            _engine(arch_params, layout), n_slots=2, segment_len=5,
+            n_blocks=10 if layout == "paged" else None,
+        )
+        for layout in ("dense", "paged")
+    }
+    handles = {
+        layout: [s.submit(_prompt(10 + i, n), m)
+                 for i, (n, m) in enumerate(zip(lens, news))]
+        for layout, s in scheds.items()
+    }
+    for s in scheds.values():
+        while s.has_work():
+            s.run_segment()
+            s.check_block_invariants()
+    for a, b in zip(handles["dense"], handles["paged"]):
+        assert a.tokens == b.tokens, f"rid={a.rid}"
+        assert b.done
+
+
+def test_eos_retirement_frees_blocks(arch_params):
+    """An eos retirement mid-budget returns the slot's blocks to the pool
+    (the dense test's scenario, plus allocator bookkeeping)."""
+    base = np.asarray(_engine(arch_params, "dense").generate(
+        jnp.asarray(_prompt(40, 8))[None, :], 12))[0]
+    eos = int(base[4])
+    sched = ContinuousScheduler(
+        _engine(arch_params, eos_token=eos), n_slots=1, segment_len=4,
+        n_blocks=4,
+    )
+    h = sched.submit(_prompt(40, 8), 12)
+    h2 = sched.submit(_prompt(41, 8), 3)
+    while sched.has_work():
+        sched.run_segment()
+        sched.check_block_invariants()
+    assert h.done and h2.done
+    assert eos in h.tokens and h.tokens[-1] == eos
+    assert len(h2.tokens) == 3
+    assert sched.allocator.n_free == sched.allocator.capacity
+
+
+# ------------------------------------------------- block-gated admission
+
+
+def test_small_pool_defers_admission_without_deadlock(arch_params):
+    """A pool that fits one request at a time serializes the workload via
+    deferral: admissions wait for blocks (not slots) and every request
+    still completes with the exact dense-scheduler stream."""
+    lens = [8, 8, 8]
+    news = [16, 16, 16]  # each request needs ceil(24/8)=3 blocks
+    dense = ContinuousScheduler(
+        _engine(arch_params, "dense"), n_slots=2, segment_len=4)
+    paged = ContinuousScheduler(
+        _engine(arch_params), n_slots=2, segment_len=4, n_blocks=3)
+    hd = [dense.submit(_prompt(50 + i, n), m)
+          for i, (n, m) in enumerate(zip(lens, news))]
+    hp = [paged.submit(_prompt(50 + i, n), m)
+          for i, (n, m) in enumerate(zip(lens, news))]
+    dense.run()
+    while paged.has_work():
+        paged.run_segment()
+        paged.check_block_invariants()
+        assert paged.allocator.n_mapped <= paged.n_blocks
+    assert paged.stats["admit_deferred"] > 0  # the pool really gated
+    assert paged.stats["blocks_in_use_peak"] <= paged.n_blocks
+    for a, b in zip(hd, hp):
+        assert a.tokens == b.tokens and b.done
+
+
+def test_submit_rejects_request_that_can_never_fit(arch_params):
+    sched = ContinuousScheduler(_engine(arch_params), n_slots=1, n_blocks=2)
+    with pytest.raises(AssertionError):
+        sched.submit(_prompt(60, 20), 10)  # needs 4 blocks, pool has 2
+
+
+# ------------------------------------------------------- compiled once
+
+
+@pytest.mark.parametrize("mode", ["scan", "while"])
+def test_paged_slot_programs_compiled_once_across_segments(arch_params, mode):
+    """One trace of the paged segment program per session; one paged prefill
+    trace per distinct prompt length — block table changes never retrace."""
+    eng = _engine(arch_params)
+    sched = ContinuousScheduler(eng, n_slots=2, segment_len=3,
+                                segment_mode=mode, n_blocks=12)
+    lens = [4, 7, 4, 7, 4]
+    handles = [sched.submit(_prompt(60 + i, n), 5 + i)
+               for i, n in enumerate(lens)]
+    sched.run()
+    assert all(h.done for h in handles)
+    assert sched.stats["segments"] >= 2
+    seg_key = ("slot_segment_paged" if mode == "scan"
+               else "slot_segment_while_paged")
+    assert eng.trace_counts[seg_key] == 1
+    assert eng.call_counts[seg_key] == sched.stats["segments"]
+    assert eng.trace_counts["prefill_slot_paged"] == 2  # 2 distinct lengths
+    assert eng.call_counts["prefill_slot_paged"] == len(lens)
+    # the dense programs were never touched
+    assert eng.trace_counts["prefill_slot"] == 0
+    assert eng.trace_counts["slot_segment"] == 0
+
+
+# ------------------------------------------------------- cache contract
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_paged_cache_contract_across_families(arch_id):
+    """Families with a growing KV cache uphold the paged pool contract;
+    the others surface their skip reason through the registry."""
+    arch = get_arch(arch_id, reduced=True)
+    reason = arch.paged_skip_reason()
+    if reason:
+        assert not arch.supports_paged_kv
+        with pytest.raises(NotImplementedError):
+            check_paged_cache_contract(arch)
+        pytest.skip(reason)
+    check_paged_cache_contract(arch)
