@@ -5,14 +5,18 @@ Usage (what .github/workflows/ci.yml runs):
 
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
     BENCH_REPEATS=1 python benchmarks/run.py \
-        --only serve_decode,serve_continuous,serve_paged
+        --only serve_decode,serve_continuous,serve_paged,serve_prefill
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
 speedup per batch, continuous-vs-static aggregate speedup, paged-vs-dense
-tok/s and peak-cache-bytes): both sides of each ratio run on the same
-machine in the same process, so they transfer between the committing box
-and a CI runner.
+tok/s and peak-cache-bytes, batched-vs-per-request admission TTFT /
+steady-state tok/s / prefill trace count): both sides of each ratio run on
+the same machine in the same process, so they transfer between the
+committing box and a CI runner.  A gated metric whose top-level SECTION is
+absent from the committed baseline is warn-and-skipped rather than failed,
+so a new bench and its first baseline can land in the same PR (hard floors
+still apply — they read the new run only).
 
 Gate contract — be explicit about what binds: a ratio FAILS when it is below
 the ``--tolerance`` band (default 0.30, env PERF_GATE_TOL) under baseline
@@ -49,6 +53,9 @@ RATIO_METRICS = {
     "serve_continuous.speedup_tok_s": 1.15,
     # paged KV must hold ~dense throughput (its win is the memory ceiling)
     "serve_paged.tok_s_ratio": 0.9,
+    # chunked admission must hold ~per-request steady-state throughput
+    # (its win is TTFT + the trace bound — ISSUE 4 acceptance criterion)
+    "serve_prefill.tok_s_ratio": 0.95,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
@@ -57,11 +64,22 @@ ABS_METRICS = [
     "serve_continuous.static.tok_s",
     "serve_paged.paged.tok_s",
     "serve_paged.dense.tok_s",
+    "serve_prefill.batched.tok_s",
+    "serve_prefill.per_request.tok_s",
 ]
 SPEEDUP_FLOOR_METRIC = "serve_continuous.speedup_tok_s"
+# hard floor, no tolerance: batched admission must cut cold TTFT p50 by
+# ≥ 1.25x on the bursty smoke workload (ISSUE 4 acceptance criterion; the
+# ratio is dominated by the deterministic trace-count gap, so it transfers)
+TTFT_FLOOR_METRIC, TTFT_FLOOR = "serve_prefill.ttft_p50_ratio", 1.25
 # hard floor, no tolerance: peak paged cache bytes must stay ≤ dense (the
 # ratio is shape-derived, deterministic — ISSUE 3 acceptance criterion)
 PAGED_BYTES_METRIC = "serve_paged.cache_bytes_saved_x"
+# hard bound, deterministic: compiled prefill programs on the bucketed path
+# must stay within the scheduler's workload-independent 2-D bucket-set
+# bound (n_buckets × n_widths) — never one per distinct prompt length
+TRACE_COUNT_METRIC = "serve_prefill.batched.prefill_traces"
+TRACE_BOUND_METRIC = "serve_prefill.prefill_trace_bound"
 
 
 def _lookup(data: dict, path: str):
@@ -103,6 +121,14 @@ def main() -> int:
 
     def check(path: str, tol: float | None, label: str,
               floor: float | None = None):
+        section = path.split(".", 1)[0]
+        if section not in base:
+            # a brand-new bench section lands together with its first
+            # baseline; until that baseline is committed there is nothing
+            # to compare against — warn and skip instead of failing
+            print(f"  {path}: section '{section}' absent from baseline — "
+                  "skipped (new bench? commit its baseline)")
+            return
         b, n = _lookup(base, path), _lookup(new, path)
         if n is None:
             failures.append(f"{path}: missing from new run")
@@ -155,6 +181,33 @@ def main() -> int:
         )
     else:
         print(f"paged cache bytes: {saved:.2f}x smaller than dense (>= 1.0x)")
+
+    ttft = _lookup(new, TTFT_FLOOR_METRIC)
+    if ttft is None:
+        failures.append(f"{TTFT_FLOOR_METRIC}: missing from new run")
+    elif ttft < TTFT_FLOOR:
+        failures.append(
+            f"{TTFT_FLOOR_METRIC}: {ttft:.2f}x < floor {TTFT_FLOOR}x — "
+            "batched admission no longer cuts cold TTFT"
+        )
+    else:
+        print(f"batched TTFT p50: {ttft:.2f}x lower than per-request "
+              f"(>= {TTFT_FLOOR}x)")
+
+    traces = _lookup(new, TRACE_COUNT_METRIC)
+    bound = _lookup(new, TRACE_BOUND_METRIC)
+    if traces is None or bound is None:
+        failures.append(
+            f"{TRACE_COUNT_METRIC} / {TRACE_BOUND_METRIC}: missing from "
+            "new run"
+        )
+    elif traces > bound:
+        failures.append(
+            f"{TRACE_COUNT_METRIC}: {traces} compiled prefill programs "
+            f"exceed the bucket-set bound {bound}"
+        )
+    else:
+        print(f"prefill traces: {traces} <= bucket-set bound {bound}")
 
     if failures:
         print("\nPERF GATE FAILED:")

@@ -19,6 +19,7 @@ Usage (CPU smoke):
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -70,7 +71,9 @@ def _run_poisson(eng: ServeEngine, args) -> None:
     sched = ContinuousScheduler(eng, n_slots=args.slots,
                                 segment_len=args.segment_len,
                                 segment_mode=args.segment_mode,
-                                n_blocks=args.n_blocks)
+                                n_blocks=args.n_blocks,
+                                prefill_chunk=args.prefill_chunk,
+                                prefill_buckets=args.prefill_buckets)
     handles = []
     t0 = time.perf_counter()
     next_arrival = 0
@@ -108,6 +111,20 @@ def _run_poisson(eng: ServeEngine, args) -> None:
     log.info("segments=%d slot-steps live=%d masked=%d admissions/slot=%s",
              st["segments"], st["slot_steps_live"], st["slot_steps_masked"],
              st["admissions_per_slot"])
+    if st["admit_rounds"]:
+        log.info("admit rounds=%d (%.2f ms/round)", st["admit_rounds"],
+                 1e3 * st["admit_time_s"] / st["admit_rounds"])
+    if sched.chunked:
+        hist = " ".join(f"{b}x{c}" for b, c in
+                        sorted(sched.stats["prefill_batch_hist"].items()))
+        log.info("chunked prefill: chunk=%d buckets=%s launches=%d "
+                 "chunks=%d batch-size histogram [%s] traces=%d",
+                 sched.prefill_chunk, sched.buckets,
+                 st["prefill_launches"], st["chunks_prefilled"], hist,
+                 eng.trace_counts["prefill_slots"]
+                 + eng.trace_counts["prefill_slots_paged"])
+    elif st["chunked_skip_reason"]:
+        log.info("chunked prefill disabled: %s", st["chunked_skip_reason"])
     if sched.paged:
         log.info("paged KV: peak blocks %d/%d (block_len=%d), "
                  "admissions deferred on full pool: %d",
@@ -148,6 +165,16 @@ def main() -> None:
     ap.add_argument("--n-blocks", type=int, default=None,
                     help="paged layout: allocatable pool blocks (default: "
                          "dense-equivalent n_slots x max_len/block_len)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="batched/chunked admission: split prompts into "
+                         "chunks of this many tokens (power of two dividing "
+                         "max_len; the launcher rounds max_len up) and "
+                         "prefill same-bucket chunks for several slots in "
+                         "one launch; 0 = per-request admission")
+    ap.add_argument("--prefill-buckets", type=int, default=4,
+                    help="chunked admission: final chunks pad up to this "
+                         "many power-of-two bucket lengths (prefill traces "
+                         "are bounded by this count)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch, reduced=args.reduced)
@@ -160,11 +187,22 @@ def main() -> None:
         )
     if args.n_blocks is not None and args.kv_layout != "paged":
         raise SystemExit("--n-blocks requires --kv-layout paged")
+    if args.prefill_chunk and args.workload != "poisson":
+        raise SystemExit(
+            "--prefill-chunk only applies to the slot scheduler: "
+            "pass --workload poisson (the batch path prefills once)"
+        )
     plan = MeshPlan()
     params = arch.init_params(jax.random.PRNGKey(args.seed))
     max_len = args.prompt_len + args.new_tokens + 1
-    if args.kv_layout == "paged":  # virtual length must be whole blocks
-        max_len += (-max_len) % args.block_len
+    # round up so max_len is whole blocks (paged) and whole prefill chunks
+    # (chunked admission) — both constraints at once via the lcm
+    quantum = 1
+    if args.kv_layout == "paged":
+        quantum = args.block_len
+    if args.prefill_chunk:
+        quantum = math.lcm(quantum, args.prefill_chunk)
+    max_len += (-max_len) % quantum
     sc = ServeConfig(
         max_len=max_len,
         temperature=args.temperature,

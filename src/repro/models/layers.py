@@ -268,8 +268,12 @@ def update_kv_cache(
 
 def paged_cache_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     """pool (n_blocks, block_len, KH, Dh), block_table (B, MB) int32 →
-    virtual per-slot cache (B, MB·block_len, KH, Dh)."""
-    g = jnp.take(pool, block_table, axis=0)  # (B, MB, bl, KH, Dh)
+    virtual per-slot cache (B, MB·block_len, KH, Dh).
+
+    mode="clip": the dummy rows of a fixed-width batched prefill carry
+    out-of-range block ids; clamping hands them finite (masked, dropped)
+    garbage instead of NaN fill values."""
+    g = jnp.take(pool, block_table, axis=0, mode="clip")  # (B, MB, bl, …)
     b, mb, bl = g.shape[:3]
     return g.reshape(b, mb * bl, *g.shape[3:])
 
@@ -290,6 +294,34 @@ def paged_cache_write(
     phys = jnp.take_along_axis(block_table, (pos // bl)[:, None], axis=1)[:, 0]
     return pool.at[phys, pos % bl].set(new[:, 0].astype(pool.dtype),
                                        unique_indices=True)
+
+
+def paged_cache_write_chunk(
+    pool: jax.Array,  # (n_blocks, block_len, KH, Dh)
+    block_table: jax.Array,  # (B, MB) int32
+    new: jax.Array,  # (B, C, KH, Dh) — one prefill chunk per slot
+    pos0: jax.Array,  # (B,) logical start position of the chunk per slot
+) -> jax.Array:
+    """Scatter a whole prefill chunk per slot at its block-table offsets.
+
+    The chunk's logical positions ``pos0[b] .. pos0[b]+C-1`` may straddle
+    block boundaries: each token resolves its own (physical block, in-block
+    offset) pair through the table.  Uniqueness holds for the same reasons
+    as the decode write — rows map disjoint physical blocks (allocator
+    contract) and within a row every logical position is distinct — BUT
+    only if every table entry the chunk touches is distinct per logical
+    block: the serving layer therefore passes table rows whose entries
+    beyond the row's mapped blocks (bucket-padding spill) and whose masked
+    dummy rows hold DISTINCT out-of-range physical ids, so those writes
+    drop (``mode="drop"``) without ever aliasing an in-bounds update or
+    repeating a (block, offset) pair."""
+    bl = pool.shape[1]
+    c = new.shape[1]
+    logical = pos0[:, None] + jnp.arange(c, dtype=pos0.dtype)  # (B, C)
+    phys = jnp.take_along_axis(block_table, logical // bl, axis=1)  # (B, C)
+    return pool.at[phys, logical % bl].set(
+        new.astype(pool.dtype), mode="drop", unique_indices=True
+    )
 
 
 # -------- int8 KV cache (SONIC C2 applied to the cache — §Perf A2/C) --------
@@ -328,11 +360,19 @@ def attention_apply(
 
     Modes:
       * cache is None                    → train/encoder forward (no cache out).
-      * cache given, S == prompt length  → prefill (writes cache at pos 0..S).
+      * cache given, S > 1, no cache_pos → prefill (writes cache at pos 0..S).
+      * cache given, S > 1, cache_pos    → chunk-resume prefill: the chunk's
+        K/V is written at per-row offsets ``cache_pos`` and the queries
+        attend over the UPDATED cache (prefix written by earlier chunks +
+        this chunk) with absolute-position causal masking.  On an
+        order-stable backend this is bitwise-identical to prefilling the
+        whole prompt at once (asserted in tests/test_serve_prefill.py).
       * cache given, S == 1              → decode step at ``cache_pos``.
-      * block_table given                → paged decode: ``cache`` is a
-        (k_pool, v_pool) block pool; the new token scatters into the mapped
-        block and attention runs over the gathered virtual cache.
+      * block_table given                → paged cache: ``cache`` is a
+        (k_pool, v_pool) block pool; decode scatters one token into the
+        mapped block (``paged_cache_write``), chunk-resume scatters the
+        whole chunk at its block-table offsets (``paged_cache_write_chunk``);
+        attention runs over the gathered virtual cache either way.
 
     Sharding (when ``plan`` has a mesh): q/k/v are constrained to head-sharded
     (or head_dim-sharded) layout over the TP axis; KV heads are replicated
@@ -376,20 +416,34 @@ def attention_apply(
 
     new_cache = None
     if block_table is not None:
-        assert cache is not None and s == 1 and cache_pos is not None, (
-            "paged cache is a decode-only layout (prefill runs on a dense "
-            "batch-1 cache, then write_cache_block installs the blocks)"
+        assert cache is not None and cache_pos is not None, (
+            "paged cache needs a write offset: decode at cache_pos, or "
+            "chunk-resume prefill starting at cache_pos (batch-1 whole-"
+            "prompt prefill runs dense, then write_cache_block installs it)"
         )
         assert cache_scales is None, "paged + int8 KV cache not supported"
         k_pool, v_pool = cache
-        k_pool = paged_cache_write(k_pool, block_table, k, cache_pos)
-        v_pool = paged_cache_write(v_pool, block_table, v, cache_pos)
-        out = decode_attention(
-            q,
-            paged_cache_gather(k_pool, block_table),
-            paged_cache_gather(v_pool, block_table),
-            cache_pos,
-        )
+        if s == 1:  # decode: one token per slot
+            k_pool = paged_cache_write(k_pool, block_table, k, cache_pos)
+            v_pool = paged_cache_write(v_pool, block_table, v, cache_pos)
+            out = decode_attention(
+                q,
+                paged_cache_gather(k_pool, block_table),
+                paged_cache_gather(v_pool, block_table),
+                cache_pos,
+            )
+        else:  # chunk-resume prefill at block-table offsets
+            k_pool = paged_cache_write_chunk(k_pool, block_table, k, cache_pos)
+            v_pool = paged_cache_write_chunk(v_pool, block_table, v, cache_pos)
+            k_virt = paged_cache_gather(k_pool, block_table)
+            v_virt = paged_cache_gather(v_pool, block_table)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(k_virt.shape[1], dtype=jnp.int32),
+                (b, k_virt.shape[1]),
+            )
+            pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
+            out = flash_attention(q, k_virt, v_virt, pos2d, kv_pos,
+                                  causal=causal)
         out = dense_apply(p["wo"], out.reshape(b, s, h * dh))
         return out, (k_pool, v_pool)
     if cache is None:
@@ -402,7 +456,10 @@ def attention_apply(
             ks_cache, vs_cache = cache_scales
             kq, ks_new = quantize_kv(k)
             vq, vs_new = quantize_kv(v)
-        write_pos = cache_pos if s == 1 else jnp.zeros((b,), jnp.int32)
+        # decode and chunk-resume write at the caller's per-row offsets;
+        # whole-prompt prefill writes at 0
+        write_pos = (cache_pos if cache_pos is not None
+                     else jnp.zeros((b,), jnp.int32))
         if quant:
             k_cache = _dus_batch(k_cache, kq, write_pos)
             v_cache = _dus_batch(v_cache, vq, write_pos)
@@ -425,7 +482,25 @@ def attention_apply(
             else:
                 k_att, v_att = k_cache, v_cache
             out = decode_attention(q, k_att, v_att, cache_pos)
-        else:  # prefill: attend over the fresh (exact) k/v
+        elif cache_pos is not None:  # chunk-resume: attend over the cache
+            # (prefix from earlier chunks + this chunk's freshly written
+            # rows); positions past the chunk end are causally masked, so
+            # stale tenant rows contribute exact zeros
+            assert not quant, (
+                "chunk-resume prefill over an int8-quantized cache is not "
+                "wired (the whole-prompt path attends over exact fresh k/v; "
+                "resuming would attend dequantized values and break the "
+                "bit-identical greedy contract) — serve with "
+                "prefill_chunk=0 under cache_quant_int8"
+            )
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(k_cache.shape[1], dtype=jnp.int32),
+                (b, k_cache.shape[1]),
+            )
+            pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
+            out = flash_attention(q, k_cache, v_cache, pos2d, kv_pos,
+                                  causal=causal)
+        else:  # whole-prompt prefill: attend over the fresh (exact) k/v
             pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
             out = flash_attention(q, k, v, pos2d, pos2d, causal=causal)
         new_cache = (

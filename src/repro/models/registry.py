@@ -48,6 +48,27 @@ class Arch:
             lambda: self.module.init_cache(cfg or self.cfg, batch, max_len, plan)
         )
 
+    # -- chunked prefill (serving; see check_slots_cache_contract) ----------
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return self.chunked_prefill_skip_reason() == ""
+
+    def chunked_prefill_skip_reason(self) -> str:
+        """'' when the family can resume prefill at a nonzero start position
+        over an existing cache prefix (the batched/chunked admission path),
+        else why not (mirrors ``paged_skip_reason``'s skip-matrix style)."""
+        if self.cfg.encoder_only:
+            return "encoder-only arch has no decode step"
+        if self.cfg.rwkv_head_size:
+            return ("rwkv carries O(1) recurrent state, not a growing KV "
+                    "cache; resuming prefill mid-prompt needs a state-"
+                    "snapshot contract that is not wired yet")
+        if self.cfg.family == "hybrid":
+            return ("hybrid cache mixes attention KV with O(1) ssm/conv "
+                    "state; chunk-resume over the recurrent leaves is not "
+                    "wired yet")
+        return ""
+
     # -- paged KV (serving; see check_paged_cache_contract) -----------------
     @property
     def supports_paged_kv(self) -> bool:
@@ -273,6 +294,136 @@ def check_slot_cache_contract(
         f"{arch.arch_id}: cache leaves whose batch dim is not axis "
         f"{CACHE_SLOT_AXIS}: {bad}"
     )
+
+
+def gather_cache_slots(cache, slots):
+    """Gather rows ``slots`` (B,) of a slot cache into a batch-B sub-cache.
+
+    The batched-prefill twin of reading one slot row: the engine's
+    ``prefill_slots`` program gathers the B rows it is about to resume,
+    runs one chunk forward over them, and scatters the result back with
+    ``write_cache_slots``.  ``slots`` may be traced and may contain
+    out-of-range ids (the masked dummy rows of a fixed-width launch) —
+    those clip to the last slot here and their results are dropped on the
+    write side, so the fixed launch shape never retraces."""
+    return jax.tree_util.tree_map(
+        lambda full: jnp.take(full, slots, axis=CACHE_SLOT_AXIS, mode="clip"),
+        cache,
+    )
+
+
+def write_cache_slots(cache, sub_cache, slots):
+    """Scatter B updated sub-cache rows back into slots ``slots`` (B,).
+
+    Multi-slot twin of ``write_cache_slot`` (same ``CACHE_SLOT_AXIS``
+    contract, checked by ``check_slots_cache_contract``): one scatter per
+    leaf installs all B rows in one launch.  Real slot ids are distinct by
+    the scheduler contract (one request per slot), hence
+    ``unique_indices``; out-of-range ids — the dummy rows that pad a
+    bucketed prefill batch up to its fixed width — DROP (``mode="drop"``),
+    which is how masked rows write nothing at all."""
+    assert CACHE_SLOT_AXIS == 1  # the at[:, slots] indexing below
+
+    def wr(full, rows):
+        return full.at[:, slots].set(
+            rows.astype(full.dtype), mode="drop", unique_indices=True
+        )
+
+    return jax.tree_util.tree_map(wr, cache, sub_cache)
+
+
+def check_slots_cache_contract(
+    arch: Arch,
+    n_slots: int = 4,
+    chunk: int = 2,
+    max_len: int = 8,
+    plan: MeshPlan | None = None,
+    cfg: ModelConfig | None = None,
+) -> None:
+    """Assert the multi-slot scatter + chunk-resume contract the batched
+    prefill programs rely on.  Pure ``eval_shape`` — allocates nothing.
+    Raises NotImplementedError (with ``chunked_prefill_skip_reason``) for
+    unsupported families, AssertionError with leaf details otherwise.
+
+    Checked:
+      * ``gather_cache_slots`` → ``write_cache_slots`` round-trips the slot
+        cache to an *identical* pytree (the donation/in-place contract);
+      * a chunk-resume forward — tokens (B, C) with per-row ``cache_pos``
+        over the gathered sub-cache — maps the sub-cache to an identical
+        pytree and yields (B, C, V) logits;
+      * when the family also supports paged KV, the paged twin (same
+        forward with a block table over a pool) maps the pool pytree to an
+        identical pytree.
+    """
+    plan = plan or MeshPlan()
+    cfg = cfg or arch.cfg
+    reason = arch.chunked_prefill_skip_reason()
+    if reason:
+        raise NotImplementedError(f"{arch.arch_id}: {reason}")
+    b = n_slots - 1  # a partial group, like a real admit round
+    cache = arch.abstract_cache(n_slots, max_len, plan, cfg)
+    slots = SDS((b,), jnp.int32)
+
+    def roundtrip(cache, slots):
+        small = gather_cache_slots(cache, slots)
+        return write_cache_slots(cache, small, slots), small
+
+    out, small = jax.eval_shape(roundtrip, cache, slots)
+
+    def assert_same_pytree(a, c, what):
+        la, ta = jax.tree_util.tree_flatten(a)
+        lc, tc = jax.tree_util.tree_flatten(c)
+        assert ta == tc, f"{arch.arch_id}: {what} changed the cache treedef"
+        bad = [
+            (i, x.shape, x.dtype, y.shape, y.dtype)
+            for i, (x, y) in enumerate(zip(la, lc))
+            if x.shape != y.shape or x.dtype != y.dtype
+        ]
+        assert not bad, f"{arch.arch_id}: {what} changed leaf specs: {bad}"
+
+    assert_same_pytree(cache, out, "slot gather/scatter round-trip")
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(small)):
+        assert leaf.shape[CACHE_SLOT_AXIS] == b, (
+            f"{arch.arch_id}: gathered sub-cache leaf {i} batch dim is "
+            f"{leaf.shape} (want {b} on axis {CACHE_SLOT_AXIS})"
+        )
+
+    params = arch.abstract_params(cfg)
+    starts = SDS((b,), jnp.int32)
+    if arch.input_kind == "tokens":
+        kw: dict[str, Any] = {"tokens": SDS((b, chunk), jnp.int32)}
+    else:
+        kw = {"embeds": SDS((b, chunk, cfg.d_model), jnp.bfloat16)}
+        if arch.input_kind == "embeds+mrope":
+            kw["positions"] = SDS((b, 3, chunk), jnp.int32)
+
+    def resume(params, small, starts, kw):
+        return arch.forward(
+            params, plan, cfg=cfg, cache=small, cache_pos=starts, **kw
+        )
+
+    logits, new_small = jax.eval_shape(resume, params, small, starts, kw)
+    assert_same_pytree(small, new_small, "chunk-resume forward")
+    assert logits.shape == (b, chunk, cfg.vocab_size), (
+        f"{arch.arch_id}: chunk-resume logits shape {logits.shape}"
+    )
+
+    if arch.supports_paged_kv:
+        block_len = max(max_len // 4, 1)
+        mb = max_len // block_len
+        pool = arch.abstract_paged_cache(n_slots + 2, block_len, plan, cfg)
+        table = SDS((b, mb), jnp.int32)
+
+        def resume_paged(params, pool, starts, table, kw):
+            return arch.forward(
+                params, plan, cfg=cfg, cache=pool, cache_pos=starts,
+                block_table=table, **kw,
+            )
+
+        _, new_pool = jax.eval_shape(
+            resume_paged, params, pool, starts, table, kw
+        )
+        assert_same_pytree(pool, new_pool, "paged chunk-resume forward")
 
 
 CACHE_BLOCK_AXIS = 1  # paged pools put the physical-block axis where the

@@ -182,11 +182,16 @@ def forward(
     embeds: jax.Array | None = None,  # (B, S, D) — stubbed modality frontends
     positions: jax.Array | None = None,  # (B, S) / (B, 3, S); default arange
     cache: dict | None = None,
-    cache_pos: jax.Array | None = None,
+    cache_pos: jax.Array | None = None,  # decode step / chunk-resume start
     remat: bool = False,
-    block_table: jax.Array | None = None,  # paged-KV decode (serving)
+    block_table: jax.Array | None = None,  # paged-KV decode/resume (serving)
 ) -> tuple[jax.Array, dict | None]:
-    """→ (logits (B, S, V), new_cache)."""
+    """→ (logits (B, S, V), new_cache).
+
+    ``cache_pos`` with S > 1 resumes prefill mid-prompt: the S tokens are
+    treated as the chunk at absolute positions ``cache_pos .. cache_pos+S-1``
+    over an existing cache prefix (see ``layers.attention_apply`` modes and
+    ``registry.check_slots_cache_contract``)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     if embeds is None:
         assert tokens is not None
@@ -197,8 +202,10 @@ def forward(
         b, s, _ = embeds.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
-        if cache_pos is not None:  # decode: absolute position of the new token
-            positions = cache_pos[:, None]
+        if cache_pos is not None:
+            # decode (S == 1) / chunk-resume prefill (S > 1): absolute
+            # positions continue from each row's cache offset
+            positions = cache_pos[:, None] + positions
 
     seq = plan.tp if s > 1 else None
     x = plan.constrain(x, plan.dp, seq, None)

@@ -33,17 +33,22 @@ the first token is sampled from the prefill logits and is never eos-pinned;
 every subsequent token is eos-checked, and once a sequence has emitted
 ``eos_token`` all its later tokens are pinned to ``eos_token``.
 
-Continuous batching (``repro.serve.scheduler``) builds on two extra compiled
+Continuous batching (``repro.serve.scheduler``) builds on extra compiled
 programs exposed here: ``_prefill_slot`` (prefill one ragged-length request
-into one row of a fixed-capacity slot cache) and ``_slot_segment`` (a
-``lax.scan`` of S masked decode steps over all slots, carry
-``(cache, tok, pos, done, key)`` with per-slot ``active``/``limit`` inputs).
-Both donate the slot cache, so device state persists across segments without
-copies.  Under ``ServeConfig.kv_layout="paged"`` the same two programs exist
-as paged twins (``_prefill_slot_paged`` / ``_slot_segment_paged`` /
-``_slot_segment_while_paged``) over a fixed block pool + host-policy block
-table instead of per-slot ``max_len`` rows — greedy outputs stay
-bit-identical to the dense slot path.  See docs/serving.md.
+into one row of a fixed-capacity slot cache), ``_prefill_slots`` (batched /
+bucketed admission: ONE launch prefills one chunk for up to ``n_slots``
+same-bucket requests at fixed (n_slots, bucket) shapes, resuming each row at
+its own cache offset — total prefill traces are bounded by the bucket set,
+not by distinct prompt lengths), and ``_slot_segment`` (a ``lax.scan`` of S
+masked decode steps over all slots, carry ``(cache, tok, pos, done, key)``
+with per-slot ``active``/``limit`` inputs).  All donate the slot cache, so
+device state persists across segments without copies.  Under
+``ServeConfig.kv_layout="paged"`` the same programs exist as paged twins
+(``_prefill_slot_paged`` / ``_prefill_slots_paged`` /
+``_slot_segment_paged`` / ``_slot_segment_while_paged``) over a fixed block
+pool + host-policy block table instead of per-slot ``max_len`` rows —
+greedy outputs stay bit-identical to the dense slot path.  See
+docs/serving.md.
 """
 from __future__ import annotations
 
@@ -76,8 +81,9 @@ class ServeConfig:
     block_len: int = 16
 
 
-_SLOT_PROGRAMS = ("prefill_slot", "slot_segment", "slot_segment_while",
-                  "prefill_slot_paged", "slot_segment_paged",
+_SLOT_PROGRAMS = ("prefill_slot", "prefill_slots", "slot_segment",
+                  "slot_segment_while", "prefill_slot_paged",
+                  "prefill_slots_paged", "slot_segment_paged",
                   "slot_segment_while_paged")
 
 
@@ -220,6 +226,48 @@ class ServeEngine:
                 pos.at[slot].set(p_len),
                 done.at[slot].set(False),
                 first,
+            )
+
+        def prefill_slots(params, cache, tok, pos, done, prompts, slots,
+                          starts, last_local, key):
+            """Prefill ONE chunk for up to B requests into B slot rows in
+            one launch (the batched/bucketed admission path).
+
+            ``prompts`` is (B, Cb) with B fixed at the scheduler's slot
+            count and Cb drawn from a small geometric bucket set, so total
+            prefill traces are bounded by ``n_buckets`` instead of by
+            distinct prompt lengths.  Per-row vectors: ``slots`` (target
+            slot; an out-of-range id marks a masked dummy row — its gather
+            clips and every one of its writes drops), ``starts`` (resume
+            offset: 0 for a first chunk, multiples of the chunk length
+            after), ``last_local`` (index of the row's last REAL token
+            inside the chunk — bucket padding sits after it and is causally
+            invisible).  The B slot rows are gathered, one chunk-resume
+            forward runs over them, and the updated rows scatter back
+            (``registry.gather_cache_slots``/``write_cache_slots``); first
+            tokens are sampled from each row's last-real-token logits and
+            only consumed by the host for final chunks.
+            """
+            self.trace_counts["prefill_slots"] += 1
+            from repro.models.registry import (
+                gather_cache_slots, write_cache_slots,
+            )
+
+            small = gather_cache_slots(cache, slots)
+            logits, small = arch.forward(
+                params, plan, cfg=self.cfg, tokens=prompts, cache=small,
+                cache_pos=starts,
+            )
+            last = jnp.take_along_axis(
+                logits, last_local[:, None, None], axis=1
+            )[:, 0]  # (B, V)
+            firsts = sample(last, key)
+            return (
+                write_cache_slots(cache, small, slots),
+                tok.at[slots].set(firsts, mode="drop"),
+                pos.at[slots].set(starts + last_local + 1, mode="drop"),
+                done.at[slots].set(False, mode="drop"),
+                firsts,
             )
 
         def slot_step(params, cache, tok, pos, done, key, active, limit,
@@ -368,6 +416,34 @@ class ServeEngine:
                 first,
             )
 
+        def prefill_slots_paged(params, pool, tok, pos, done, prompts, slots,
+                                starts, last_local, bt_rows, key):
+            """Paged twin of ``prefill_slots``: the chunk's K/V scatters
+            straight into each row's mapped physical blocks at its
+            block-table offsets (``layers.paged_cache_write_chunk``) and the
+            queries attend over the gathered virtual caches — no dense
+            staging cache.  ``bt_rows`` is (B, max_blocks): real rows carry
+            their slot's table row; dummy rows carry DISTINCT out-of-range
+            physical ids so their writes drop without aliasing a live
+            block.
+            """
+            self.trace_counts["prefill_slots_paged"] += 1
+            logits, pool = arch.forward(
+                params, plan, cfg=self.cfg, tokens=prompts, cache=pool,
+                cache_pos=starts, block_table=bt_rows,
+            )
+            last = jnp.take_along_axis(
+                logits, last_local[:, None, None], axis=1
+            )[:, 0]
+            firsts = sample(last, key)
+            return (
+                pool,
+                tok.at[slots].set(firsts, mode="drop"),
+                pos.at[slots].set(starts + last_local + 1, mode="drop"),
+                done.at[slots].set(False, mode="drop"),
+                firsts,
+            )
+
         def slot_segment_paged(n_steps, params, pool, tok, pos, done, key,
                                active, limit, block_table):
             """``slot_segment`` over a paged pool (same step math)."""
@@ -398,6 +474,9 @@ class ServeEngine:
             self._prefill_slot = jax.jit(
                 prefill_slot, donate_argnums=(1, 2, 3, 4)
             )
+            self._prefill_slots = jax.jit(
+                prefill_slots, donate_argnums=(1, 2, 3, 4)
+            )
             self._slot_segment = jax.jit(
                 slot_segment, static_argnums=(0,), donate_argnums=(2, 3, 4, 5)
             )
@@ -407,6 +486,9 @@ class ServeEngine:
             )
             self._prefill_slot_paged = jax.jit(
                 prefill_slot_paged, donate_argnums=(1, 2, 3, 4)
+            )
+            self._prefill_slots_paged = jax.jit(
+                prefill_slots_paged, donate_argnums=(1, 2, 3, 4)
             )
             self._slot_segment_paged = jax.jit(
                 slot_segment_paged, static_argnums=(0,),
@@ -422,8 +504,10 @@ class ServeEngine:
                 decode_loop if sc.loop != "while" else decode_loop_while
             )
             self._prefill_slot, self._slot_segment = prefill_slot, slot_segment
+            self._prefill_slots = prefill_slots
             self._slot_segment_while = slot_segment_while
             self._prefill_slot_paged = prefill_slot_paged
+            self._prefill_slots_paged = prefill_slots_paged
             self._slot_segment_paged = slot_segment_paged
             self._slot_segment_while_paged = slot_segment_while_paged
 
@@ -440,6 +524,17 @@ class ServeEngine:
             self._checked_contracts.add("slot")
         return self.arch.init_cache(n_slots, self.sc.max_len, self.plan,
                                     cfg=self.cfg)
+
+    def check_chunked_prefill_contract(self) -> None:
+        """Verify the multi-slot scatter + chunk-resume contract once per
+        engine (cheap, eval_shape only).  Raises NotImplementedError with
+        the family's ``chunked_prefill_skip_reason`` when unsupported —
+        the scheduler catches it and falls back to per-request admission."""
+        from repro.models.registry import check_slots_cache_contract
+
+        if "slots" not in self._checked_contracts:
+            check_slots_cache_contract(self.arch, plan=self.plan, cfg=self.cfg)
+            self._checked_contracts.add("slots")
 
     @property
     def max_blocks_per_slot(self) -> int:

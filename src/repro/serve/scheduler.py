@@ -16,9 +16,19 @@ host-owned policy vectors uploaded with each segment call:
 
 Between compiled segments the host scheduler:
 
-    admit   pop queued requests into free slots — one ``_prefill_slot`` call
-            per request at its OWN prompt length (no cross-request padding);
-            the prefill-sampled first tokens stream after one bundled fetch
+    admit   pop queued requests into free slots.  Default (PR 2/3): one
+            ``_prefill_slot`` call per request at its OWN prompt length (no
+            cross-request padding).  With ``prefill_chunk > 0`` (PR 4):
+            prompts split into ``prefill_chunk``-sized chunks carried across
+            admit rounds (one chunk per slot per round — long prompts no
+            longer head-of-line-block running decodes), the final chunk
+            padded up to a geometric bucket set, and every round's
+            same-bucket chunks share ONE fixed-width ``_prefill_slots``
+            launch (dummy rows mask themselves via out-of-range slot/block
+            ids), so compiled prefill programs are bounded by the bucket
+            count instead of by distinct prompt lengths.  Either way the
+            prefill-sampled first tokens stream after one bundled fetch
+            per round, and greedy outputs are bit-identical across paths
     run     one ``_slot_segment`` launch = ``segment_len`` decode steps for
             every slot; finished slots ride along masked (active=0 → emitted
             −1, pos frozen) so the program never retraces.  The only
@@ -121,9 +131,57 @@ class ContinuousScheduler:
         segment_mode: str | None = None,
         seed: int = 0,
         n_blocks: int | None = None,
+        prefill_chunk: int = 0,
+        prefill_buckets: int = 4,
         clock: Callable[[], float] = time.perf_counter,
     ):
         assert n_slots >= 1 and segment_len >= 1, (n_slots, segment_len)
+        # batched/chunked admission (prefill_chunk > 0): prompts are split
+        # into prefill_chunk-sized chunks carried across admit rounds, the
+        # final chunk padded up to a geometric bucket set (powers of two
+        # down from prefill_chunk, prefill_buckets entries), and every admit
+        # round groups same-bucket chunks into ONE fixed-width
+        # (n_slots, bucket) prefill_slots launch.  prefill_chunk == 0 keeps
+        # the PR 2/3 one-request-per-launch admission.
+        self.prefill_chunk = int(prefill_chunk)
+        self.chunked = self.prefill_chunk > 0
+        self.stats_skip_reason = ""
+        if self.chunked:
+            reason = ""
+            if engine.plan.cache_quant_int8:
+                reason = ("chunk-resume prefill is not wired for the int8-"
+                          "quantized KV cache (dense whole-prompt prefill "
+                          "attends exact fresh k/v)")
+            else:
+                reason = engine.arch.chunked_prefill_skip_reason()
+            if reason:
+                log.warning(
+                    "batched/chunked prefill disabled — falling back to "
+                    "per-request admission: %s", reason,
+                )
+                self.chunked = False
+                self.stats_skip_reason = reason
+        if self.chunked:
+            assert self.prefill_chunk & (self.prefill_chunk - 1) == 0, (
+                f"prefill_chunk must be a power of two, got "
+                f"{self.prefill_chunk}"
+            )
+            assert engine.sc.max_len % self.prefill_chunk == 0, (
+                f"prefill_chunk {self.prefill_chunk} must divide max_len "
+                f"{engine.sc.max_len} (chunk writes must stay in bounds)"
+            )
+            assert 1 <= prefill_buckets <= self.prefill_chunk.bit_length(), (
+                f"prefill_buckets {prefill_buckets} out of range for chunk "
+                f"{self.prefill_chunk}"
+            )
+            # ascending, e.g. chunk=32, 4 buckets -> (4, 8, 16, 32)
+            self.buckets = tuple(
+                self.prefill_chunk >> i for i in reversed(range(prefill_buckets))
+            )
+            engine.check_chunked_prefill_contract()
+        # slot -> next chunk start offset for requests still prefilling
+        # (admitted to a slot, not yet active; chunks advance one per round)
+        self._prefill_start: dict[int, int] = {}
         # "scan": fixed segment_len steps per launch.  "while": segment_len
         # becomes a cap; the compiled loop exits early at the first
         # retirement boundary (when the queue is non-empty) so freed slots
@@ -178,6 +236,13 @@ class ContinuousScheduler:
             "admissions_per_slot": [0] * n_slots,
             "admit_deferred": 0,
             "blocks_in_use_peak": 0,
+            # batched/chunked admission accounting (serve_prefill bench)
+            "admit_rounds": 0,
+            "admit_time_s": 0.0,
+            "prefill_launches": 0,
+            "chunks_prefilled": 0,
+            "prefill_batch_hist": {},  # real rows per launch -> count
+            "chunked_skip_reason": self.stats_skip_reason,
         }
 
     # -------------------------------------------------------------- paged
@@ -265,6 +330,207 @@ class ContinuousScheduler:
     # -------------------------------------------------------------- admit
 
     def _admit(self) -> int:
+        """One admit round (timed for the serve_prefill bench): batched/
+        chunked admission when ``prefill_chunk`` is set, else the PR 2/3
+        one-request-per-launch path."""
+        t0 = self.clock()
+        n = (self._admit_chunked() if self.chunked
+             else self._admit_per_request())
+        self.stats["admit_time_s"] += self.clock() - t0
+        self.stats["admit_rounds"] += 1
+        return n
+
+    def _claim_queue_head(self, slot: int) -> Request | None:
+        """Claim the queue head for ``slot``: paged block gating (deferral
+        preserves FIFO — the caller must stop admitting for the round on
+        None with a non-empty queue), allocator/table bookkeeping, and
+        admission stats.  Shared by both admission paths so their policy
+        cannot drift.  The caller decides slot occupancy (a 1-token
+        request on the per-request path never occupies its slot)."""
+        if not self.queue:
+            return None
+        req = self.queue[0]
+        if self.paged:
+            nb = self._blocks_for(req)
+            if not self.allocator.can_alloc(nb):
+                self.stats["admit_deferred"] += 1
+                return None
+            blocks = self.allocator.alloc(slot, nb)
+            self.block_table[slot, :nb] = blocks
+            self.block_table[slot, nb:] = slot
+            self.stats["blocks_in_use_peak"] = max(
+                self.stats["blocks_in_use_peak"], self.allocator.n_mapped
+            )
+        self.queue.popleft()
+        req.state = RUNNING
+        req.slot_history.append(slot)
+        self.stats["admitted"] += 1
+        self.stats["admissions_per_slot"][slot] += 1
+        return req
+
+    def _claim_free_slots(self) -> None:
+        """Move queued requests into free slots, FIFO.  Claimed requests
+        enter the prefilling set; they go live only when their final chunk
+        lands."""
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None:
+                continue
+            req = self._claim_queue_head(slot)
+            if req is None:
+                break  # queue empty, or the pool deferred the head
+            self.slots[slot] = req
+            self._prefill_start[slot] = 0
+
+    @property
+    def n_width_buckets(self) -> int:
+        """Distinct launch widths: powers of two up to next_pow2(n_slots)."""
+        return (self.n_slots - 1).bit_length() + 1
+
+    @property
+    def max_prefill_traces(self) -> int:
+        """Workload-independent bound on compiled prefill programs: one per
+        (chunk-length bucket × launch-width bucket) shape — the 2-D
+        bucketing analogue of the Sparse-on-Dense fixed-shape mapping.
+        Distinct prompt lengths never enter the count."""
+        return len(self.buckets) * self.n_width_buckets
+
+    def _next_chunk(self, req: Request, start: int) -> tuple[int, int, bool]:
+        """(real_len, bucket_len, is_final) for the chunk at ``start``:
+        full ``prefill_chunk`` chunks until the remainder fits, then the
+        remainder padded up to the smallest covering bucket."""
+        rem = req.prompt_len - start
+        if rem > self.prefill_chunk:
+            return self.prefill_chunk, self.prefill_chunk, False
+        bucket = next(b for b in self.buckets if b >= rem)
+        return rem, bucket, True
+
+    def _admit_chunked(self) -> int:
+        """Batched/bucketed admission: claim free slots, then advance every
+        prefilling slot by ONE chunk this round — same-bucket chunks share
+        one fixed-width ``prefill_slots`` launch (dummy rows carry
+        out-of-range slot/block ids, so their writes drop and the launch
+        shape never varies).  One bundled host→device prompt upload per
+        bucket group and ONE ``device_get`` of first tokens per round;
+        long prompts carry their chunk cursor across rounds, so decode
+        segments interleave with their prefill instead of stalling behind
+        it.  Returns the number of requests that went live (or finished)
+        this round.
+        """
+        self._claim_free_slots()
+        n_live = 0
+        # one chunk per prefilling slot per round while a BATCH of decodes
+        # is live (that's the interleave: running requests keep streaming
+        # between a long prompt's chunks); at ≤1 live decode there is no
+        # batch to protect, so chunk rounds drain back-to-back instead of
+        # stretching the prefill across segment round-trips
+        while self._prefill_start:
+            n_live += self._prefill_round()
+            if int(self.active.sum()) > 1:
+                break
+        return n_live
+
+    def _prefill_round(self) -> int:
+        """Advance every prefilling slot by one chunk: bucket-group the
+        chunks, launch one fixed-shape program per group, fetch all first
+        tokens once, and activate/finish the rows whose final chunk landed.
+        """
+        eng = self.engine
+        rows_by_bucket: dict[int, list[tuple[int, int, int, bool]]] = {}
+        for slot, start in sorted(self._prefill_start.items()):
+            req = self.slots[slot]
+            real, bucket, final = self._next_chunk(req, start)
+            rows_by_bucket.setdefault(bucket, []).append(
+                (slot, start, real, final)
+            )
+        pool_size = (self.n_slots + self.n_blocks) if self.paged else 0
+        launched: list[tuple[list, jax.Array]] = []
+        for bucket in sorted(rows_by_bucket):
+            rows = rows_by_bucket[bucket]
+            # launch width is bucketed to powers of two as well (second
+            # bucketing axis): a trickle refill of one slot runs the cheap
+            # width-1 program instead of paying n_slots× padded compute,
+            # while traces stay bounded by n_buckets × n_widths
+            width = 1 << (len(rows) - 1).bit_length()
+            prompts = np.zeros((width, bucket), np.int32)
+            # dummy rows: slot ids past n_slots are distinct and
+            # out-of-range — every tok/pos/done/cache write drops
+            slots_v = np.arange(self.n_slots, self.n_slots + width,
+                                dtype=np.int32)
+            starts = np.zeros(width, np.int32)
+            last_local = np.zeros(width, np.int32)
+            if self.paged:
+                # dummy block-table rows: distinct out-of-range physical
+                # ids per (row, logical block), so the chunk scatter stays
+                # unique-indices sound while every dummy write drops
+                bt = pool_size + np.arange(
+                    width * self.max_blocks, dtype=np.int32
+                ).reshape(width, self.max_blocks)
+            for i, (slot, start, real, _final) in enumerate(rows):
+                req = self.slots[slot]
+                prompts[i, :real] = req.prompt[start:start + real]
+                slots_v[i] = slot
+                starts[i] = start
+                last_local[i] = real - 1
+                if self.paged:
+                    bt[i] = self.block_table[slot]
+                    # the row's UNMAPPED table tail keeps its distinct
+                    # out-of-range ids (from the dummy fill above) instead
+                    # of the real row's scratch entries: a final chunk's
+                    # bucket padding may spill past the mapped blocks, and
+                    # repeating the scratch id there would hand the chunk
+                    # scatter duplicate (block, offset) pairs — OOB ids
+                    # keep it unique_indices-sound and the writes drop
+                    nb_mapped = len(self.allocator.mapped[slot])
+                    bt[i, nb_mapped:] = (pool_size + i * self.max_blocks
+                                         + np.arange(nb_mapped,
+                                                     self.max_blocks))
+            self.key, sub = jax.random.split(self.key)
+            args = (eng.params, self.cache, self.tok, self.pos, self.done,
+                    jnp.asarray(prompts), jnp.asarray(slots_v),
+                    jnp.asarray(starts), jnp.asarray(last_local))
+            if self.paged:
+                fn, ckey = eng._prefill_slots_paged, "prefill_slots_paged"
+                args = (*args, jnp.asarray(bt), sub)
+            else:
+                fn, ckey = eng._prefill_slots, "prefill_slots"
+                args = (*args, sub)
+            self.cache, self.tok, self.pos, self.done, firsts = fn(*args)
+            eng.call_counts[ckey] += 1
+            launched.append((rows, firsts))
+            self.stats["prefill_launches"] += 1
+            self.stats["chunks_prefilled"] += len(rows)
+            hist = self.stats["prefill_batch_hist"]
+            hist[len(rows)] = hist.get(len(rows), 0) + 1
+        # the ONLY admit-round download: every launch's first tokens at once
+        firsts_h = jax.device_get([f for _, f in launched])
+        now = self.clock()
+        n_live = 0
+        for (rows, _), fh in zip(launched, firsts_h):
+            for i, (slot, start, real, final) in enumerate(rows):
+                req = self.slots[slot]
+                if not final:
+                    self._prefill_start[slot] = start + real
+                    continue
+                del self._prefill_start[slot]
+                req.first_token_t = now
+                req._emit(int(fh[i]))
+                n_live += 1
+                if req.max_new_tokens <= 1:
+                    # prefill token is the whole budget: finished without
+                    # ever decoding, so its blocks/row free immediately
+                    # (the written KV is never read)
+                    req.state = FINISHED
+                    req.finish_t = now
+                    self.slots[slot] = None
+                    if self.paged:
+                        self._release_blocks(slot)
+                    self.stats["retired"] += 1
+                else:
+                    self.active[slot] = True
+                    self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
+        return n_live
+
+    def _admit_per_request(self) -> int:
         """Fill every free slot from the queue (prefill-into-slot).  All
         prefills dispatch first; first tokens stream after ONE bundled
         device fetch.
@@ -285,21 +551,10 @@ class ContinuousScheduler:
             if deferred:
                 break
             while self.slots[slot] is None and self.queue:
-                req = self.queue[0]
-                if self.paged:
-                    nb = self._blocks_for(req)
-                    if not self.allocator.can_alloc(nb):
-                        self.stats["admit_deferred"] += 1
-                        deferred = True
-                        break
-                    blocks = self.allocator.alloc(slot, nb)
-                    self.block_table[slot, :nb] = blocks
-                    self.block_table[slot, nb:] = slot
-                    self.stats["blocks_in_use_peak"] = max(
-                        self.stats["blocks_in_use_peak"],
-                        self.allocator.n_mapped,
-                    )
-                self.queue.popleft()
+                req = self._claim_queue_head(slot)
+                if req is None:  # pool deferred the head — stop the round
+                    deferred = True
+                    break
                 self.key, sub = jax.random.split(self.key)
                 if self.paged:
                     self.cache, self.tok, self.pos, self.done, first = (
@@ -321,13 +576,10 @@ class ContinuousScheduler:
                     )
                     eng.call_counts["prefill_slot"] += 1
                 pending.append((req, slot, first))
-                self.stats["admitted"] += 1
-                self.stats["admissions_per_slot"][slot] += 1
                 if req.max_new_tokens <= 1:  # prefill token is the budget:
                     if self.paged:  # never decoded → KV never read
                         self._release_blocks(slot)
                     continue  # finished below; slot stays free — refill it
-                req.state = RUNNING
                 self.slots[slot] = req
                 self.active[slot] = True
                 self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
@@ -337,7 +589,6 @@ class ContinuousScheduler:
         now = self.clock()
         for (req, slot, _), first in zip(pending, firsts):
             req.first_token_t = now
-            req.slot_history.append(slot)
             req._emit(int(first))
             if req.max_new_tokens <= 1:
                 req.state = FINISHED
@@ -358,7 +609,12 @@ class ContinuousScheduler:
                 self.tok, self.pos, self.done, self.key,
                 jnp.asarray(self.active), jnp.asarray(self.limit))
         if self.segment_mode == "while":
-            args = (*base, jnp.bool_(bool(self.queue)))
+            # early-exit at retirement boundaries whenever admission work
+            # is pending: queued requests, or a claimed prompt still mid-
+            # chunked-prefill (its next chunk only advances between
+            # segments, so riding out a long segment delays its TTFT)
+            pending = bool(self.queue) or bool(self._prefill_start)
+            args = (*base, jnp.bool_(pending))
             if self.paged:
                 seg_fn, seg_key = (eng._slot_segment_while_paged,
                                    "slot_segment_while_paged")

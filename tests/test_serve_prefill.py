@@ -1,0 +1,306 @@
+"""Batched, chunked prefill (ISSUE 4 acceptance tests): bit-identical greedy
+outputs vs the sequential oracle AND the unbatched (PR 3) scheduler under
+both cache layouts, the chunk-resume forward contract, the ≤ n_buckets
+prefill trace bound on ragged workloads, decode programs untouched, and the
+per-family skip_reason fallback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ALL_ARCH_IDS
+from repro.models.registry import check_slots_cache_contract, get_arch
+from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine
+from repro.sharding.mesh import MeshPlan
+
+PLAN = MeshPlan()
+MAX_LEN, BLOCK_LEN = 64, 8
+CHUNK, N_BUCKETS = 16, 3  # buckets (4, 8, 16)
+
+
+@pytest.fixture(scope="module")
+def arch_params():
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    return arch, params
+
+
+@pytest.fixture(scope="module")
+def engines(arch_params):
+    """Module-scoped engines so compiled programs are shared across cases."""
+    arch, params = arch_params
+
+    def mk(layout):
+        sc = ServeConfig(max_len=MAX_LEN, kv_layout=layout,
+                         block_len=BLOCK_LEN)
+        return ServeEngine(arch, params, PLAN, sc)
+
+    return {"dense": mk("dense"), "paged": mk("paged"), "oracle": mk("dense"),
+            "unbatched": mk("dense")}
+
+
+def _prompt(seed, length):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (length,), 0, 256),
+        np.int32,
+    )
+
+
+def _sched(engines, layout, chunked=True, **kw):
+    if chunked:
+        kw.setdefault("prefill_chunk", CHUNK)
+        kw.setdefault("prefill_buckets", N_BUCKETS)
+    if layout == "paged":
+        kw.setdefault("n_blocks", 20)
+    kw.setdefault("segment_len", 4)
+    return ContinuousScheduler(engines[layout], n_slots=3, **kw)
+
+
+def _drain(sched):
+    while sched.has_work():
+        sched.run_segment()
+        sched.check_block_invariants()
+
+
+# ----------------------------------------------- chunk-resume forward
+
+
+def test_chunk_resume_forward_bitwise(arch_params):
+    """The contract everything above rests on: prefilling a prompt in
+    chunks at nonzero start positions over the cache prefix reproduces the
+    whole-prompt prefill logits and cache BIT-FOR-BIT — including a final
+    chunk padded with garbage past the real prompt."""
+    arch, params = arch_params
+    p_len, chunk = 13, 8
+    prompt = jnp.asarray(_prompt(0, p_len))[None, :]
+    cache = arch.init_cache(1, 32, PLAN)
+    want_lg, want_c = arch.forward(params, PLAN, tokens=prompt, cache=cache)
+
+    cache = arch.init_cache(1, 32, PLAN)
+    _, cache = arch.forward(
+        params, PLAN, tokens=prompt[:, :chunk], cache=cache,
+        cache_pos=jnp.zeros((1,), jnp.int32),
+    )
+    tail = jnp.concatenate(  # real remainder + garbage bucket padding
+        [prompt[:, chunk:], jnp.asarray(_prompt(99, 3))[None, :]], axis=1
+    )
+    lg, cache = arch.forward(
+        params, PLAN, tokens=tail, cache=cache,
+        cache_pos=jnp.full((1,), chunk, jnp.int32),
+    )
+    assert bool(jnp.all(want_lg[0, -1] == lg[0, p_len - chunk - 1]))
+    for a, b in zip(jax.tree_util.tree_leaves(want_c),
+                    jax.tree_util.tree_leaves(cache)):
+        assert bool(jnp.all(a[:, :, :p_len] == b[:, :, :p_len]))
+
+
+# ------------------------------------------ bit-identical equivalence
+
+
+@pytest.mark.parametrize("mode", ["scan", "while"])
+def test_uniform_workload_bit_identical_to_static_engine(engines, mode):
+    prompts = jnp.stack([jnp.asarray(_prompt(i, 8)) for i in range(6)])
+    want = np.asarray(engines["oracle"].generate(prompts, 10))
+    sched = _sched(engines, "dense", segment_mode=mode)
+    handles = [sched.submit(np.asarray(prompts[i]), 10) for i in range(6)]
+    _drain(sched)
+    got = np.stack([h.tokens for h in handles])
+    np.testing.assert_array_equal(got, want, err_msg=mode)
+    assert all(h.done for h in handles)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_ragged_matches_oracle_and_unbatched_scheduler(engines, layout):
+    """Ragged prompts that straddle chunk (16) and block (8) boundaries,
+    plus a max_new == 1 request: the chunked/bucketed scheduler's streams
+    equal both the sequential oracle and the PR 3 per-request scheduler,
+    request by request."""
+    lens = [3, 7, 13, 16, 17, 37, 5, 2, 24]
+    news = [6, 12, 3, 1, 9, 8, 5, 4, 7]
+    prompts = [_prompt(10 + i, n) for i, n in enumerate(lens)]
+    want = [
+        list(np.asarray(
+            engines["oracle"].generate(jnp.asarray(p)[None, :], n))[0])
+        for p, n in zip(prompts, news)
+    ]
+    unb = _sched(engines, "unbatched", chunked=False)
+    hu = [unb.submit(p, n) for p, n in zip(prompts, news)]
+    _drain(unb)
+    sched = _sched(engines, layout)
+    hc = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    _drain(sched)
+    for w, a, b in zip(want, hu, hc):
+        assert a.tokens == w, f"unbatched diverged rid={a.rid}"
+        assert b.tokens == w, f"{layout} chunked diverged rid={b.rid}"
+        assert b.done
+
+
+def test_long_prompt_chunks_interleave_with_decode(engines):
+    """A prompt longer than prefill_chunk spreads its prefill over several
+    admit rounds while a BATCH of already-running short requests keeps
+    decoding — and finishing — in between (no head-of-line blocking).
+    With ≤ 1 live decode the scheduler instead drains chunks back-to-back
+    (nothing to interleave against), so the single-request prefill is not
+    stretched across segment round-trips."""
+    long_p = _prompt(50, 40)  # 40 → 3 chunk rounds at chunk=16
+    shorts = [_prompt(51, 4), _prompt(52, 6)]
+    want_long = list(np.asarray(
+        engines["oracle"].generate(jnp.asarray(long_p)[None, :], 6))[0])
+    want_shorts = [
+        list(np.asarray(
+            engines["oracle"].generate(jnp.asarray(p)[None, :], 4))[0])
+        for p in shorts
+    ]
+    sched = _sched(engines, "dense", segment_len=2)
+    h_shorts = [sched.submit(p, 4) for p in shorts]
+    _ = sched.run_segment()  # both shorts admit and start decoding
+    h_long = sched.submit(long_p, 6)
+    _drain(sched)
+    for h, w in zip(h_shorts, want_shorts):
+        assert h.tokens == w
+    assert h_long.tokens == want_long
+    assert sched.stats["chunks_prefilled"] >= 3 + 2
+    # the short batch kept retiring while the long prompt was still
+    # prefilling chunk-by-chunk between segments
+    assert min(h.finish_t for h in h_shorts) < h_long.first_token_t
+
+    # single-request drain: with nothing live, a long prompt's chunks run
+    # back-to-back inside ONE admit round
+    sched2 = _sched(engines, "dense", segment_len=2)
+    h2 = sched2.submit(_prompt(53, 40), 4)
+    sched2.run_segment()
+    assert h2.tokens  # first token landed in the first admit round
+    assert sched2.stats["admit_rounds"] == 1
+    assert sched2.stats["chunks_prefilled"] == 3
+
+
+def test_paged_bucket_padding_spills_past_mapped_blocks(engines):
+    """A final chunk whose bucket padding covers more logical blocks than
+    the request has mapped (prompt 33 + max_new 2 maps 5 blocks of 8, but
+    buckets to a 64-wide chunk spanning 8): the spilled pad writes must
+    drop through distinct out-of-range table ids — outputs stay exact and
+    no live block is clobbered (invariants checked per segment)."""
+    p, n = _prompt(80, 33), 2
+    want = list(np.asarray(
+        engines["oracle"].generate(jnp.asarray(p)[None, :], n))[0])
+    sched = _sched(engines, "paged", prefill_chunk=64, prefill_buckets=4)
+    other = sched.submit(_prompt(81, 5), 4)  # shares the pool meanwhile
+    h = sched.submit(p, n)
+    _drain(sched)
+    assert h.done and h.tokens == want
+    assert other.done and len(other.tokens) == 4
+
+
+def test_max_new_one_finishes_at_admission(engines):
+    want = np.asarray(
+        engines["oracle"].generate(jnp.asarray(_prompt(30, 5))[None, :], 1)
+    )[0]
+    sched = _sched(engines, "dense")
+    h = sched.submit(_prompt(30, 5), 1)
+    _drain(sched)
+    assert h.done and h.tokens == [int(want[0])]
+    assert sched.stats["segments"] == 0
+
+
+# -------------------------------------------------- trace-count bound
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_prefill_traces_bounded_by_buckets_on_ragged_workload(
+    arch_params, layout
+):
+    """32 requests over 12 distinct prompt lengths: the per-request path
+    compiles one prefill program per distinct length; the bucketed path
+    compiles at most n_buckets × n_widths programs (the 2-D chunk-length ×
+    launch-width bucket set — workload-independent, strictly below the
+    distinct-length count here) — and never touches the decode segment or
+    per-request prefill programs."""
+    arch, params = arch_params
+    rng = np.random.RandomState(3)
+    lens = [3, 4, 5, 6, 7, 9, 11, 13, 15, 16, 21, 37]
+    lens = [lens[i % len(lens)] for i in range(32)]
+    prompts = [rng.randint(0, 256, (n,)).astype(np.int32) for n in lens]
+    news = [int(n) for n in rng.randint(2, 6, 32)]
+
+    def mk():
+        return ServeEngine(
+            arch, params, PLAN,
+            ServeConfig(max_len=MAX_LEN, kv_layout=layout,
+                        block_len=BLOCK_LEN),
+        )
+
+    nb = {"n_blocks": 24} if layout == "paged" else {}
+    eng_per = mk()
+    per = ContinuousScheduler(eng_per, n_slots=4, segment_len=4, **nb)
+    hp = [per.submit(p, n) for p, n in zip(prompts, news)]
+    per.run()
+    eng_bat = mk()
+    bat = ContinuousScheduler(eng_bat, n_slots=4, segment_len=4,
+                              prefill_chunk=CHUNK,
+                              prefill_buckets=N_BUCKETS, **nb)
+    hb = [bat.submit(p, n) for p, n in zip(prompts, news)]
+    bat.run()
+    for a, b in zip(hp, hb):
+        assert a.tokens == b.tokens and b.done
+
+    single = "prefill_slot" + ("_paged" if layout == "paged" else "")
+    batched = "prefill_slots" + ("_paged" if layout == "paged" else "")
+    seg = "slot_segment" + ("_paged" if layout == "paged" else "")
+    n_distinct = len(set(lens))
+    assert eng_per.trace_counts[single] == n_distinct  # today's cost
+    assert eng_bat.trace_counts[batched] <= bat.max_prefill_traces  # PR 4
+    assert bat.max_prefill_traces < n_distinct  # bound beats ragged today
+    assert eng_bat.trace_counts[single] == 0
+    # decode segment programs: still exactly one trace, same as per-request
+    assert eng_bat.trace_counts[seg] == 1
+    assert eng_bat.trace_counts[seg] == eng_per.trace_counts[seg]
+    assert bat.stats["prefill_launches"] >= 1
+    assert sum(bat.stats["prefill_batch_hist"].values()) == \
+        bat.stats["prefill_launches"]
+
+
+# ------------------------------------------------------ cache contract
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_slots_cache_contract_across_families(arch_id):
+    """Families that can resume prefill uphold the multi-slot scatter +
+    chunk-resume contract; the others surface their skip reason."""
+    arch = get_arch(arch_id, reduced=True)
+    reason = arch.chunked_prefill_skip_reason()
+    if reason:
+        assert not arch.supports_chunked_prefill
+        with pytest.raises(NotImplementedError):
+            check_slots_cache_contract(arch)
+        pytest.skip(reason)
+    check_slots_cache_contract(arch)
+
+
+def test_unsupported_family_falls_back_to_per_request():
+    """A family without chunk-resume (rwkv) still serves: the scheduler
+    logs the skip reason, records it in stats, and admits per-request."""
+    arch = get_arch("rwkv6-3b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(arch, params, PLAN, ServeConfig(max_len=32))
+    sched = ContinuousScheduler(eng, n_slots=2, segment_len=4,
+                                prefill_chunk=8, prefill_buckets=2)
+    assert not sched.chunked
+    assert sched.stats["chunked_skip_reason"]
+    want = np.asarray(
+        eng.generate(jnp.asarray(_prompt(70, 6))[None, :], 5))[0]
+    h = sched.submit(_prompt(70, 6), 5)
+    sched.run()
+    assert h.done and h.tokens == list(want)
+    assert eng.call_counts["prefill_slot"] == 1  # per-request path ran
+    assert eng.call_counts["prefill_slots"] == 0
+
+
+def test_scheduler_validates_chunk_geometry(engines):
+    with pytest.raises(AssertionError):  # not a power of two
+        _sched(engines, "dense", prefill_chunk=12)
+    with pytest.raises(AssertionError):  # more buckets than chunk halvings
+        _sched(engines, "dense", prefill_chunk=4, prefill_buckets=8)
+    eng = ServeEngine(engines["dense"].arch, engines["dense"].params, PLAN,
+                      ServeConfig(max_len=50))
+    with pytest.raises(AssertionError):  # chunk must divide max_len
+        ContinuousScheduler(eng, prefill_chunk=16)

@@ -2,7 +2,8 @@
 
 Each case draws arrival order, prompt lengths, token budgets, scheduler
 geometry, and segment mode from a seeded RNG, runs the workload through the
-continuous scheduler under BOTH cache layouts, and oracles every request
+continuous scheduler under BOTH cache layouts × BOTH admission paths
+(per-request and batched/chunked prefill), and oracles every request
 against a sequential batch-1 ``ServeEngine.generate`` run.  The paged cases
 additionally run ``check_block_invariants`` after every segment (no block
 mapped to two live slots, free ∪ mapped = pool, table rows mirror the
@@ -63,7 +64,7 @@ def _oracle(engines, prompts, news):
     ]
 
 
-def _run_sched(engines, layout, prompts, news, rng):
+def _run_sched(engines, layout, prompts, news, rng, chunked=False):
     n_slots = int(rng.randint(2, 4))
     segment_len = int(rng.randint(2, 8))
     mode = ("scan", "while")[int(rng.randint(2))]
@@ -74,6 +75,9 @@ def _run_sched(engines, layout, prompts, news, rng):
         need_max = max(-(-(len(p) + n) // BLOCK_LEN)
                        for p, n in zip(prompts, news))
         kw["n_blocks"] = int(rng.randint(need_max, dense_eq + 1))
+    if chunked:  # batched/bucketed admission (PR 4); chunk 8 ⇒ buckets (4, 8)
+        kw["prefill_chunk"] = 8
+        kw["prefill_buckets"] = 2
     sched = ContinuousScheduler(engines[layout], n_slots=n_slots,
                                 segment_len=segment_len, segment_mode=mode,
                                 **kw)
@@ -101,17 +105,22 @@ def test_random_workload_matches_sequential_oracle(engines, seed):
     prompts, news = _draw_workload(rng, n_requests=int(rng.randint(6, 12)))
     want = _oracle(engines, prompts, news)
     for layout in ("dense", "paged"):
-        handles, sched = _run_sched(
-            engines, layout, prompts, news, np.random.RandomState(seed + 100)
-        )
-        for h, w, n in zip(handles, want, news):
-            assert h.done and len(h.tokens) == n
-            assert h.tokens == w, (layout, h.rid, h.tokens, w)
-        st = sched.stats
-        assert st["admitted"] == st["retired"] == len(prompts)
-        if layout == "paged":
-            assert sched.allocator.n_free == sched.allocator.capacity
-            assert st["blocks_in_use_peak"] <= sched.n_blocks
+        for chunked in (False, True):
+            handles, sched = _run_sched(
+                engines, layout, prompts, news,
+                np.random.RandomState(seed + 100), chunked=chunked,
+            )
+            tag = (layout, "chunked" if chunked else "per-request")
+            for h, w, n in zip(handles, want, news):
+                assert h.done and len(h.tokens) == n
+                assert h.tokens == w, (*tag, h.rid, h.tokens, w)
+            st = sched.stats
+            assert st["admitted"] == st["retired"] == len(prompts)
+            if chunked:
+                assert st["chunks_prefilled"] >= len(prompts)
+            if layout == "paged":
+                assert sched.allocator.n_free == sched.allocator.capacity
+                assert st["blocks_in_use_peak"] <= sched.n_blocks
 
 
 def test_paged_pool_serves_more_context_than_it_holds(engines):
