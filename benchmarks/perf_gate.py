@@ -5,7 +5,7 @@ Usage (what .github/workflows/ci.yml runs):
 
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
     BENCH_REPEATS=1 python benchmarks/run.py \
-        --only serve_decode,serve_continuous,serve_paged,serve_prefill
+        --only serve_decode,serve_continuous,serve_paged,serve_prefill,serve_spec
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
@@ -56,6 +56,9 @@ RATIO_METRICS = {
     # chunked admission must hold ~per-request steady-state throughput
     # (its win is TTFT + the trace bound — ISSUE 4 acceptance criterion)
     "serve_prefill.tok_s_ratio": 0.95,
+    # speculative decode also has a hard 1.2x floor below; the ratio entry
+    # tracks the trajectory against the committed baseline
+    "serve_spec.tok_s_ratio": 1.2,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
@@ -66,6 +69,8 @@ ABS_METRICS = [
     "serve_paged.dense.tok_s",
     "serve_prefill.batched.tok_s",
     "serve_prefill.per_request.tok_s",
+    "serve_spec.spec.tok_s",
+    "serve_spec.plain.tok_s",
 ]
 SPEEDUP_FLOOR_METRIC = "serve_continuous.speedup_tok_s"
 # hard floor, no tolerance: batched admission must cut cold TTFT p50 by
@@ -80,6 +85,14 @@ PAGED_BYTES_METRIC = "serve_paged.cache_bytes_saved_x"
 # bound (n_buckets × n_widths) — never one per distinct prompt length
 TRACE_COUNT_METRIC = "serve_prefill.batched.prefill_traces"
 TRACE_BOUND_METRIC = "serve_prefill.prefill_trace_bound"
+# speculative decoding (ISSUE 5) hard floors, same-process ratios: on the
+# high-acceptance smoke workload, draft-and-verify must beat plain decode
+# by >= 1.2x with >= 1.5 tokens accepted per step, and the compiled
+# draft-and-verify program count must stay at the one-per-flavour bound
+SPEC_SPEEDUP_METRIC, SPEC_SPEEDUP_FLOOR = "serve_spec.tok_s_ratio", 1.2
+SPEC_ACCEPT_METRIC, SPEC_ACCEPT_FLOOR = "serve_spec.mean_accepted_len", 1.5
+SPEC_TRACE_METRIC = "serve_spec.spec.spec_traces"
+SPEC_TRACE_BOUND_METRIC = "serve_spec.spec_trace_bound"
 
 
 def _lookup(data: dict, path: str):
@@ -208,6 +221,45 @@ def main() -> int:
         )
     else:
         print(f"prefill traces: {traces} <= bucket-set bound {bound}")
+
+    spec_x = _lookup(new, SPEC_SPEEDUP_METRIC)
+    if spec_x is None:
+        failures.append(f"{SPEC_SPEEDUP_METRIC}: missing from new run")
+    elif spec_x < SPEC_SPEEDUP_FLOOR:
+        failures.append(
+            f"{SPEC_SPEEDUP_METRIC}: {spec_x:.2f}x < floor "
+            f"{SPEC_SPEEDUP_FLOOR}x — speculative decode no longer beats "
+            "plain decode on the high-acceptance workload"
+        )
+    else:
+        print(f"speculative speedup: {spec_x:.2f}x >= {SPEC_SPEEDUP_FLOOR}x")
+
+    acc = _lookup(new, SPEC_ACCEPT_METRIC)
+    if acc is None:
+        failures.append(f"{SPEC_ACCEPT_METRIC}: missing from new run")
+    elif acc < SPEC_ACCEPT_FLOOR:
+        failures.append(
+            f"{SPEC_ACCEPT_METRIC}: {acc:.2f} < floor {SPEC_ACCEPT_FLOOR} — "
+            "mean accepted length collapsed (drafter or acceptance rule "
+            "regressed)"
+        )
+    else:
+        print(f"mean accepted length: {acc:.2f} >= {SPEC_ACCEPT_FLOOR}")
+
+    spec_traces = _lookup(new, SPEC_TRACE_METRIC)
+    spec_bound = _lookup(new, SPEC_TRACE_BOUND_METRIC)
+    if spec_traces is None or spec_bound is None:
+        failures.append(
+            f"{SPEC_TRACE_METRIC} / {SPEC_TRACE_BOUND_METRIC}: missing "
+            "from new run"
+        )
+    elif spec_traces > spec_bound:
+        failures.append(
+            f"{SPEC_TRACE_METRIC}: {spec_traces} compiled draft-and-verify "
+            f"programs exceed the bound {spec_bound}"
+        )
+    else:
+        print(f"spec traces: {spec_traces} <= bound {spec_bound}")
 
     if failures:
         print("\nPERF GATE FAILED:")

@@ -7,12 +7,13 @@ compile time), then the median of ``BENCH_REPEATS`` timed repeats (default 3,
 env-overridable), each fenced with ``jax.block_until_ready``.  Repeat calls
 run with stdout suppressed so tables print once.
 
-``serve_decode``, ``serve_continuous``, ``serve_paged``, and
-``serve_prefill`` additionally record into machine-readable
-``BENCH_serve.json`` (each under its own section — compiled-vs-python
-decode tok/s per batch size, continuous-vs-static aggregate tok/s +
-p50/p95 request latency, paged-vs-dense KV tok/s + peak cache bytes, and
-batched/chunked-vs-per-request admission TTFT + prefill trace counts) so
+``serve_decode``, ``serve_continuous``, ``serve_paged``,
+``serve_prefill``, and ``serve_spec`` additionally record into
+machine-readable ``BENCH_serve.json`` (each under its own section —
+compiled-vs-python decode tok/s per batch size, continuous-vs-static
+aggregate tok/s + p50/p95 request latency, paged-vs-dense KV tok/s + peak
+cache bytes, batched/chunked-vs-per-request admission TTFT + prefill trace
+counts, and speculative-vs-plain decode tok/s + mean accepted length) so
 the serving-perf trajectory
 is tracked across PRs; CI's perf gate (``benchmarks/perf_gate.py``) compares
 a fresh run against the committed copy.  Select a subset with
@@ -698,6 +699,169 @@ def serve_prefill():
     return out
 
 
+# --------------------------------------------------------------- serve spec
+
+
+def serve_spec():
+    """Speculative decoding (draft-and-verify) vs plain decode through the
+    continuous scheduler: aggregate tok/s, mean accepted length per
+    draft-and-verify step, and the compiled spec-program count, recorded
+    under "serve_spec" in BENCH_serve.json.
+
+    High-acceptance smoke construction: acceptance is a MODEL-QUALITY
+    property (how well the drafter approximates the verifier), which a
+    random-init smoke box cannot measure honestly — real deployments get it
+    from sparsity-aware training / layer distillation of the served
+    checkpoint (the SONIC premise).  So the gated workload constructs one
+    deliberately: an 8-layer verifier whose deep layers' output projections
+    are scaled by 0.03 — a stand-in for a checkpoint whose first 2 layers
+    carry most of the signal — with the first-2-layers prefix as the
+    drafter (``SpecConfig(draft="truncate:2")``, 4x fewer layer-flops per
+    draft, reading the verifier's own KV).  The verifier still pays full
+    8-layer compute per step, so the spec/plain ratio measures exactly what
+    the serving stack controls: window-verify amortization minus draft
+    overhead at a given acceptance rate.  Greedy outputs are asserted
+    bit-identical between the two schedulers before anything is timed; a
+    natural-acceptance datapoint (75%-sparse self-drafter on unmodified
+    random weights — weak by construction) is recorded un-gated alongside.
+    """
+    import dataclasses
+
+    from repro.models.registry import get_arch
+    from repro.serve import (
+        ContinuousScheduler, ServeConfig, ServeEngine, SpecConfig,
+    )
+    from repro.sharding.mesh import MeshPlan
+
+    arch0 = get_arch("tinyllama-1.1b", reduced=True)
+    n_layers, n_draft, alpha, spec_k = 8, 2, 0.03, 4
+    cfg = arch0.cfg.replace(n_layers=n_layers)
+    arch = dataclasses.replace(arch0, cfg=cfg)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    scale = np.ones(n_layers, np.float32)
+    scale[n_draft:] = alpha  # deep layers contribute weakly (see docstring)
+    sc_vec = jnp.asarray(scale)
+    layers = dict(params["layers"])
+    for blk in ("attn", "ffn"):
+        sub = dict(layers[blk])
+        wo = dict(sub["wo"])
+        wo["kernel"] = wo["kernel"] * sc_vec[:, None, None].astype(
+            wo["kernel"].dtype)
+        sub["wo"] = wo
+        layers[blk] = sub
+    params = dict(params)
+    params["layers"] = layers
+    plan = MeshPlan()
+
+    # decode-heavy mixed workload: short prompts, long-ish outputs (spec
+    # attacks the per-token decode bottleneck, not prefill)
+    n_slots, max_len = 4, 96
+    lens = [5, 9, 7, 12, 5, 9, 7, 5, 12, 9]
+    news = [40, 24, 48, 32, 40, 16, 48, 24, 32, 40]
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    useful = sum(news)
+
+    spec = SpecConfig(k=spec_k, draft=f"truncate:{n_draft}")
+    engines = {
+        "plain": ServeEngine(arch, params, plan,
+                             ServeConfig(max_len=max_len, temperature=0.0)),
+        "spec": ServeEngine(arch, params, plan,
+                            ServeConfig(max_len=max_len, temperature=0.0,
+                                        spec=spec)),
+    }
+    # segment lengths chosen for comparable host-interaction cadence per
+    # emitted token: a spec step emits up to k+1 tokens
+    seg_len = {"plain": 16, "spec": 4}
+
+    def run(mode):
+        t0 = time.perf_counter()
+        sched = ContinuousScheduler(engines[mode], n_slots=n_slots,
+                                    segment_len=seg_len[mode],
+                                    segment_mode="while")
+        handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+        sched.run()
+        total = time.perf_counter() - t0
+        return total, [h.tokens for h in handles], sched.stats
+
+    # warmup (compiles every program) + output-equivalence assertion
+    _, plain_toks, _ = run("plain")
+    _, spec_toks, _ = run("spec")
+    assert spec_toks == plain_toks, "speculative outputs diverged from plain"
+    # interleave timed reps so both modes sample the same box state
+    reps = max(BENCH_REPEATS, 3)
+    runs = {"plain": [], "spec": []}
+    for _ in range(reps):
+        for mode in ("plain", "spec"):
+            runs[mode].append(run(mode))
+    out = {
+        "arch": f"tinyllama-1.1b (reduced, {n_layers} layers, deep-layer "
+                f"scale {alpha})",
+        "workload": {"n_requests": len(prompts), "prompt_lens": lens,
+                     "new_tokens": news, "n_slots": n_slots,
+                     "segment_len": seg_len, "segment_mode": "while"},
+        "spec_config": {"k": spec_k, "draft": f"truncate:{n_draft}"},
+    }
+    for mode in ("plain", "spec"):
+        t, _, stats = min(runs[mode], key=lambda r: r[0])
+        out[mode] = {"tok_s": useful / t}
+        if mode == "spec":
+            hist = stats["accepted_hist"]
+            steps = sum(hist.values())
+            out[mode]["mean_accepted_len"] = (
+                stats["spec_emitted"] / max(steps, 1)
+            )
+            out[mode]["accepted_hist"] = {
+                str(k): v for k, v in sorted(hist.items())
+            }
+            eng = engines["spec"]
+            out[mode]["spec_traces"] = sum(
+                v for k, v in eng.trace_counts.items() if "spec" in k
+            )
+    # one compiled draft-and-verify program per (mode × layout) in use
+    out["spec_trace_bound"] = 1
+    out["tok_s_ratio"] = out["spec"]["tok_s"] / out["plain"]["tok_s"]
+    out["mean_accepted_len"] = out["spec"]["mean_accepted_len"]
+
+    # un-gated natural-acceptance datapoint: sparse self-draft on the
+    # UNMODIFIED random-init weights (what conversion alone buys with no
+    # training signal — reported for the record, weak by construction)
+    params0 = arch.init_params(jax.random.PRNGKey(0))
+    eng_nat = ServeEngine(
+        arch, params0, plan,
+        ServeConfig(max_len=max_len, temperature=0.0,
+                    spec=SpecConfig(k=2, draft="self", draft_sparsity=0.75)),
+    )
+    sched = ContinuousScheduler(eng_nat, n_slots=n_slots, segment_len=4,
+                                segment_mode="while")
+    for p, n in zip(prompts[:4], news[:4]):
+        sched.submit(p, n)
+    sched.run()
+    st = sched.stats
+    out["self_sparse_075"] = {
+        "k": 2,
+        "mean_accepted_len": st["spec_emitted"] / max(st["spec_steps"], 1),
+    }
+
+    print("\n== serve_spec: speculative draft-and-verify vs plain decode ==")
+    print(f"{'mode':>6s} {'tok/s':>9s} {'acc len':>8s}")
+    for mode in ("plain", "spec"):
+        r = out[mode]
+        acc = f"{r.get('mean_accepted_len', float('nan')):8.2f}" \
+            if mode == "spec" else "       -"
+        print(f"{mode:>6s} {r['tok_s']:9.1f} {acc}")
+    print(f"speculative speedup {out['tok_s_ratio']:.2f}x at mean accepted "
+          f"length {out['mean_accepted_len']:.2f} tok/step "
+          f"(hist {out['spec']['accepted_hist']}, "
+          f"{out['spec']['spec_traces']} spec traces <= "
+          f"{out['spec_trace_bound']}); "
+          f"untrained self-sparse drafter: "
+          f"{out['self_sparse_075']['mean_accepted_len']:.2f} tok/step")
+    _merge_bench_json("serve_spec", out)
+    return out
+
+
 # ---------------------------------------------------------------- roofline
 
 
@@ -746,10 +910,12 @@ def main() -> None:
          lambda o: f"bytes_saved={o['cache_bytes_saved_x']:.2f}x"),
         ("serve_prefill", serve_prefill,
          lambda o: f"ttft_p50={o['ttft_p50_ratio']:.2f}x"),
+        ("serve_spec", serve_spec,
+         lambda o: f"spec_speedup={o['tok_s_ratio']:.2f}x"),
         ("roofline_table", roofline_table, lambda o: f"cells={o.get('cells', 0)}"),
     ]
     self_timed = {"serve_decode", "serve_continuous", "serve_paged",
-                  "serve_prefill"}
+                  "serve_prefill", "serve_spec"}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench names (default: all)")

@@ -182,6 +182,96 @@ def sonic_linear_apply(
     raise ValueError(f"unknown mode {mode!r}")
 
 
+def _auto_block(k: int, n: int, cap: int = 128) -> tuple[int, int]:
+    """Largest power-of-two block ≤ ``cap`` dividing each dim — lets the
+    sparse drafter conversion work on any model width (the reduced smoke
+    configs are far below the 128-tile default)."""
+
+    def side(d: int) -> int:
+        b = 1
+        while b * 2 <= min(cap, d) and d % (b * 2) == 0:
+            b *= 2
+        return b
+
+    return side(k), side(n)
+
+
+def sparse_draft_params(
+    params: dict,
+    sparsity: float,
+    block: tuple[int, int] | None = None,
+    num_clusters: int = 0,
+):
+    """Convert a transformer's stacked layer weights into their SONIC
+    serving form and re-densify — the **self-drafting** model for
+    speculative decoding (``serve.engine.SpecConfig(draft="self")``).
+
+    Every stacked 2-D kernel under ``params["layers"]`` (attention
+    q/k/v/o, FFN projections — leaves of shape (L, K, N)) is block-pruned
+    with ``make_block_sparse`` (balanced top-|L1| K-blocks per N-block, the
+    C1 structure) and, when ``num_clusters > 0``, value-clustered
+    (``pack_clustered``, the C2 codebook) — then reconstructed to a dense
+    array so the drafter runs through the ordinary jnp forward on any
+    backend.  On SONIC hardware the same conversion feeds the fused
+    ``sonic_matmul`` kernel, where (1 − sparsity) of the weight traffic
+    disappears; here the point is the *model*: a cheap approximate drafter
+    distilled from the served weights themselves, no second checkpoint
+    needed.  Embeddings, norms, and the LM head are shared unchanged (the
+    drafter must propose over the exact vocab).  ``sparsity=0.0`` keeps
+    every block — the conversion is then exact and the drafter agrees with
+    the verifier token-for-token (the full-acceptance oracle the spec tests
+    exploit).
+    """
+
+    def convert_stack(w: jax.Array) -> jax.Array:
+        if w.ndim != 3:  # biases / norm scales ride along unchanged
+            return w
+        blk = block or _auto_block(w.shape[1], w.shape[2])
+
+        def one(m: jax.Array) -> jax.Array:
+            bs = make_block_sparse(m, sparsity, blk)
+            if num_clusters > 0:
+                from repro.core.clustering import (
+                    ClusteringConfig, pack_clustered,
+                )
+
+                nb, r, bk, bn = bs.values.shape
+                flat = bs.values.reshape(nb * r * bk, bn)
+                cw = pack_clustered(
+                    flat, ClusteringConfig(num_clusters=num_clusters)
+                )
+                bs = BlockSparseWeight(
+                    values=cw.dense(m.dtype).reshape(nb, r, bk, bn),
+                    indices=bs.indices,
+                    k_blocks=bs.k_blocks,
+                )
+            return bs.dense(m.dtype)
+
+        # one-time host-side conversion at engine construction: a plain
+        # per-layer loop (k-means inside the clustered path is not vmappable)
+        return jnp.stack([one(w[i]) for i in range(w.shape[0])])
+
+    out = dict(params)
+    out["layers"] = jax.tree_util.tree_map(convert_stack, params["layers"])
+    return out
+
+
+def truncated_draft_params(params: dict, n_layers: int):
+    """First-``n_layers`` prefix of a transformer's stacked layer params,
+    sharing the embed / final-norm / LM-head leaves with the verifier — the
+    layer-skipping self-drafter (``SpecConfig(draft="truncate:N")``).
+
+    Because the prefix layers are the *same weights*, the drafter's KV for
+    any context equals the verifier's KV at those layers exactly — which is
+    why the speculative engine can hand the drafter a slice of the verifier
+    cache instead of maintaining (and prefill-ing) a second one."""
+    out = dict(params)
+    out["layers"] = jax.tree_util.tree_map(
+        lambda a: a[:n_layers], params["layers"]
+    )
+    return out
+
+
 def convert_linear(
     w: jax.Array, config: SonicExecutionConfig
 ) -> SonicLinearParams:

@@ -15,6 +15,10 @@ Usage (CPU smoke):
         --reduced --batch 4 --prompt-len 16 --new-tokens 32
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --workload poisson --n-requests 16 --rate 50
+    # speculative decoding with a sparse self-drafter (greedy only):
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --workload poisson --n-requests 16 --rate 50 \
+        --spec-k 4 --spec-draft self --spec-sparsity 0.5
 """
 from __future__ import annotations
 
@@ -73,7 +77,8 @@ def _run_poisson(eng: ServeEngine, args) -> None:
                                 segment_mode=args.segment_mode,
                                 n_blocks=args.n_blocks,
                                 prefill_chunk=args.prefill_chunk,
-                                prefill_buckets=args.prefill_buckets)
+                                prefill_buckets=args.prefill_buckets,
+                                prefill_token_budget=args.prefill_token_budget)
     handles = []
     t0 = time.perf_counter()
     next_arrival = 0
@@ -91,9 +96,14 @@ def _run_poisson(eng: ServeEngine, args) -> None:
         if sched.has_work():
             running = sched.run_segment()
             st = sched.stats
+            spec_note = ""
+            if sched.spec is not None and st["spec_steps"]:
+                spec_note = (f" accepted={st['spec_emitted'] / st['spec_steps']:.2f}"
+                             f"tok/step")
             log.info("segment %-3d running=%d queued=%d admitted=%d retired=%d "
-                     "steps=%d", st["segments"], running, len(sched.queue),
-                     st["admitted"], st["retired"], st["steps_total"])
+                     "steps=%d%s", st["segments"], running, len(sched.queue),
+                     st["admitted"], st["retired"], st["steps_total"],
+                     spec_note)
         elif next_arrival < args.n_requests:
             time.sleep(max(arrivals[next_arrival] - (time.perf_counter() - t0),
                            0.0))
@@ -130,6 +140,18 @@ def _run_poisson(eng: ServeEngine, args) -> None:
                  "admissions deferred on full pool: %d",
                  st["blocks_in_use_peak"], sched.n_blocks, sched.block_len,
                  st["admit_deferred"])
+    if sched.spec is not None:
+        hist = st["accepted_hist"]
+        total_steps = sum(hist.values())
+        mean_acc = (sum(n * c for n, c in hist.items()) / total_steps
+                    if total_steps else 0.0)
+        bars = " ".join(f"{n}tok:{hist[n]}" for n in sorted(hist))
+        log.info("speculative decode: k=%d draft=%s — %d draft-and-verify "
+                 "slot-steps, mean accepted length %.2f tok/step, "
+                 "acceptance histogram [%s]",
+                 sched.spec.k, sched.spec.draft, total_steps, mean_acc, bars)
+    elif st["spec_skip_reason"]:
+        log.info("speculative decode disabled: %s", st["spec_skip_reason"])
 
 
 def main() -> None:
@@ -175,6 +197,22 @@ def main() -> None:
                     help="chunked admission: final chunks pad up to this "
                          "many power-of-two bucket lengths (prefill traces "
                          "are bounded by this count)")
+    ap.add_argument("--prefill-token-budget", type=int, default=0,
+                    help="Sarathi-style admit rounds: advance up to this "
+                         "many real prefill tokens per round (requires "
+                         "--prefill-chunk; 0 = one chunk per prefilling "
+                         "slot per round)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft this many tokens per "
+                         "step and verify them in one forward of the served "
+                         "model (0 = off; greedy only)")
+    ap.add_argument("--spec-draft", default="self",
+                    help="drafter: 'self' (sparse SONIC conversion of the "
+                         "served weights) or 'truncate:N' (first N layers "
+                         "reading the verifier's KV)")
+    ap.add_argument("--spec-sparsity", type=float, default=0.75,
+                    help="weight sparsity of the 'self' drafter conversion "
+                         "(0.0 = exact copy, full acceptance)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch, reduced=args.reduced)
@@ -192,9 +230,20 @@ def main() -> None:
             "--prefill-chunk only applies to the slot scheduler: "
             "pass --workload poisson (the batch path prefills once)"
         )
+    if args.prefill_token_budget and not args.prefill_chunk:
+        raise SystemExit("--prefill-token-budget requires --prefill-chunk")
+    if args.spec_k and args.workload != "poisson":
+        raise SystemExit(
+            "--spec-k only applies to the slot scheduler: pass "
+            "--workload poisson"
+        )
+    if args.spec_k and args.temperature > 0:
+        raise SystemExit("speculative decoding is greedy-only: --spec-k "
+                         "needs --temperature 0")
     plan = MeshPlan()
     params = arch.init_params(jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.new_tokens + 1
+    # spec decoding writes up to spec_k rejected-tail tokens past the cursor
+    max_len = args.prompt_len + args.new_tokens + 1 + args.spec_k
     # round up so max_len is whole blocks (paged) and whole prefill chunks
     # (chunked admission) — both constraints at once via the lcm
     quantum = 1
@@ -203,6 +252,12 @@ def main() -> None:
     if args.prefill_chunk:
         quantum = math.lcm(quantum, args.prefill_chunk)
     max_len += (-max_len) % quantum
+    spec = None
+    if args.spec_k:
+        from repro.serve import SpecConfig
+
+        spec = SpecConfig(k=args.spec_k, draft=args.spec_draft,
+                          draft_sparsity=args.spec_sparsity)
     sc = ServeConfig(
         max_len=max_len,
         temperature=args.temperature,
@@ -210,6 +265,7 @@ def main() -> None:
         eos_token=args.eos_token,
         kv_layout=args.kv_layout,
         block_len=args.block_len,
+        spec=spec,
     )
     eng = ServeEngine(arch, params, plan, sc)
     if args.workload == "poisson":

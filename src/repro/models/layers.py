@@ -206,23 +206,31 @@ def flash_attention(
 
 
 def decode_attention(
-    q: jax.Array,  # (B, 1, H, Dh)
+    q: jax.Array,  # (B, C, H, Dh) — C decode-style queries per slot
     k_cache: jax.Array,  # (B, S_max, KH, Dh)
     v_cache: jax.Array,  # (B, S_max, KH, Dh)
-    pos: jax.Array,  # (B,) current position (index of the new token)
+    pos: jax.Array,  # (B,) position of the FIRST query token
 ) -> jax.Array:
-    """Single-token attention over the cache (positions > pos are masked)."""
-    b, _, h, dh = q.shape
+    """Decode-style attention over the cache: query i (at absolute position
+    ``pos + i``) attends cache positions ``<= pos + i``; everything beyond is
+    masked.  C == 1 is the classic single-token decode step; C > 1 is the
+    speculative-verify window, which deliberately reuses this exact
+    formulation (plain softmax, not the online-softmax flash path) so each
+    window row computes bitwise the same math as the sequential decode step
+    it replaces — the greedy spec/non-spec bit-identicality contract
+    (docs/serving.md) rests on that."""
+    b, c, h, dh = q.shape
     kh = k_cache.shape[2]
     g = h // kh
-    qg = q.reshape(b, 1, kh, g, dh)
-    s = _gqa_scores(qg, k_cache, dh**-0.5)  # (B,KH,G,1,S_max) fp32
+    qg = q.reshape(b, c, kh, g, dh)
+    s = _gqa_scores(qg, k_cache, dh**-0.5)  # (B,KH,G,C,S_max) fp32
     idx = jnp.arange(k_cache.shape[1])
-    mask = idx[None, :] <= pos[:, None]  # (B, S_max)
-    s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+    qpos = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]  # (B, C)
+    mask = idx[None, None, :] <= qpos[:, :, None]  # (B, C, S_max)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache)
-    return out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, dh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, dh)
 
 
 def _dus_batch(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
@@ -355,6 +363,7 @@ def attention_apply(
     cache_pos: jax.Array | None = None,  # (B,)
     block_table: jax.Array | None = None,  # (B, MB) int32 — paged cache mode
     causal: bool = True,
+    decode_chunk: bool = False,  # speculative-verify window (serving)
 ) -> tuple[jax.Array, tuple | None]:
     """Full attention block (no norm/residual).  Returns (out, new_cache).
 
@@ -363,16 +372,24 @@ def attention_apply(
       * cache given, S > 1, no cache_pos → prefill (writes cache at pos 0..S).
       * cache given, S > 1, cache_pos    → chunk-resume prefill: the chunk's
         K/V is written at per-row offsets ``cache_pos`` and the queries
-        attend over the UPDATED cache (prefix written by earlier chunks +
-        this chunk) with absolute-position causal masking.  On an
+        attend over the UPDATED cache (prefix from earlier chunks + this
+        chunk) with absolute-position causal masking.  On an
         order-stable backend this is bitwise-identical to prefilling the
         whole prompt at once (asserted in tests/test_serve_prefill.py).
+      * cache given, S > 1, cache_pos, decode_chunk → speculative-verify
+        window: same cache writes as chunk-resume, but attention runs
+        through ``decode_attention`` (plain softmax over the updated cache,
+        one decode-style row per window token) instead of the flash path —
+        each row is bitwise the SAME computation as the sequential decode
+        step it replaces, which is what makes greedy speculative outputs
+        bit-identical to non-speculative decoding (docs/serving.md).
       * cache given, S == 1              → decode step at ``cache_pos``.
       * block_table given                → paged cache: ``cache`` is a
         (k_pool, v_pool) block pool; decode scatters one token into the
-        mapped block (``paged_cache_write``), chunk-resume scatters the
-        whole chunk at its block-table offsets (``paged_cache_write_chunk``);
-        attention runs over the gathered virtual cache either way.
+        mapped block (``paged_cache_write``), chunk-resume / verify-window
+        scatters the whole chunk at its block-table offsets
+        (``paged_cache_write_chunk``); attention runs over the gathered
+        virtual cache either way.
 
     Sharding (when ``plan`` has a mesh): q/k/v are constrained to head-sharded
     (or head_dim-sharded) layout over the TP axis; KV heads are replicated
@@ -432,6 +449,15 @@ def attention_apply(
                 paged_cache_gather(v_pool, block_table),
                 cache_pos,
             )
+        elif decode_chunk:  # speculative-verify window at block offsets
+            k_pool = paged_cache_write_chunk(k_pool, block_table, k, cache_pos)
+            v_pool = paged_cache_write_chunk(v_pool, block_table, v, cache_pos)
+            out = decode_attention(
+                q,
+                paged_cache_gather(k_pool, block_table),
+                paged_cache_gather(v_pool, block_table),
+                cache_pos,
+            )
         else:  # chunk-resume prefill at block-table offsets
             k_pool = paged_cache_write_chunk(k_pool, block_table, k, cache_pos)
             v_pool = paged_cache_write_chunk(v_pool, block_table, v, cache_pos)
@@ -474,8 +500,16 @@ def attention_apply(
             if quant:
                 ks_cache = plan.constrain(ks_cache, *cspec[:3])
                 vs_cache = plan.constrain(vs_cache, *cspec[:3])
-        if s == 1:  # decode: attend over the (dequantized) cache
+        if s == 1 or (decode_chunk and cache_pos is not None):
+            # decode step / speculative-verify window: attend over the
+            # (dequantized) cache, one plain-softmax row per query token
             assert cache_pos is not None
+            assert not (decode_chunk and quant), (
+                "speculative verification over an int8-quantized cache is "
+                "not wired (the verify window must recompute exactly what "
+                "sequential decode would — serve with spec=None under "
+                "cache_quant_int8)"
+            )
             if quant:
                 k_att = dequantize_kv(k_cache, ks_cache, q.dtype)
                 v_att = dequantize_kv(v_cache, vs_cache, q.dtype)

@@ -69,6 +69,23 @@ class Arch:
                     "wired yet")
         return ""
 
+    # -- speculative decoding (serving; see serve.engine.SpecConfig) --------
+    @property
+    def supports_spec_decode(self) -> bool:
+        return self.spec_decode_skip_reason() == ""
+
+    def spec_decode_skip_reason(self) -> str:
+        """'' when the family can run speculative draft-and-verify decoding,
+        else why not.  The verify pass is a chunk-resume forward (K+1 tokens
+        at a nonzero per-row cache offset, ``decode_chunk`` attention) plus
+        cursor rollback over a growing KV cache, so the support matrix is
+        exactly the chunked-prefill one: rwkv's O(1) recurrent state cannot
+        be rolled back by truncating a cursor, hybrid mixes KV with
+        recurrent leaves, encoder-only never decodes.  (The int8-quantized
+        KV cache is additionally excluded at the engine level — a plan
+        property, not a family one.)"""
+        return self.chunked_prefill_skip_reason()
+
     # -- paged KV (serving; see check_paged_cache_contract) -----------------
     @property
     def supports_paged_kv(self) -> bool:

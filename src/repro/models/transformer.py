@@ -71,6 +71,7 @@ def layer_apply(
     cache: tuple[jax.Array, jax.Array] | None = None,
     cache_pos: jax.Array | None = None,
     block_table: jax.Array | None = None,
+    decode_chunk: bool = False,
 ) -> tuple[jax.Array, tuple | None]:
     b, s, _ = x.shape
     seq = plan.tp if s > 1 else None  # SP only when the seq dim exists
@@ -88,6 +89,7 @@ def layer_apply(
         cache_pos=cache_pos,
         block_table=block_table,
         causal=not cfg.encoder_only,
+        decode_chunk=decode_chunk,
     )
     # constrain the sublayer OUTPUT (a TP partial sum) before the residual
     # add: GSPMD then lowers psum+shard to reduce-scatter instead of
@@ -116,6 +118,7 @@ def trunk_apply(
     cache_pos: jax.Array | None = None,
     remat: bool = False,
     block_table: jax.Array | None = None,  # paged: cache leaves are pools
+    decode_chunk: bool = False,  # speculative-verify window (serving)
 ) -> tuple[jax.Array, dict | None]:
     """Scan the stacked layers.  Returns (hidden, new_cache).
 
@@ -150,11 +153,13 @@ def trunk_apply(
         if quant:
             lp, kc, vc, ks, vs = inp
             x, new_c = layer_apply(lp, cfg, x, positions, plan,
-                                   (kc, vc, ks, vs), cache_pos)
+                                   (kc, vc, ks, vs), cache_pos,
+                                   decode_chunk=decode_chunk)
         else:
             lp, kc, vc = inp
             x, new_c = layer_apply(lp, cfg, x, positions, plan, (kc, vc),
-                                   cache_pos, block_table)
+                                   cache_pos, block_table,
+                                   decode_chunk=decode_chunk)
         return x, new_c
 
     if quant:
@@ -185,13 +190,17 @@ def forward(
     cache_pos: jax.Array | None = None,  # decode step / chunk-resume start
     remat: bool = False,
     block_table: jax.Array | None = None,  # paged-KV decode/resume (serving)
+    decode_chunk: bool = False,  # speculative-verify window (serving)
 ) -> tuple[jax.Array, dict | None]:
     """→ (logits (B, S, V), new_cache).
 
     ``cache_pos`` with S > 1 resumes prefill mid-prompt: the S tokens are
     treated as the chunk at absolute positions ``cache_pos .. cache_pos+S-1``
     over an existing cache prefix (see ``layers.attention_apply`` modes and
-    ``registry.check_slots_cache_contract``)."""
+    ``registry.check_slots_cache_contract``).  ``decode_chunk=True`` (with
+    ``cache_pos``, S > 1) is the speculative-verify window: same cache
+    writes, but attention runs decode-style so every window row is bitwise
+    the computation sequential decode would do (``layers.decode_attention``)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     if embeds is None:
         assert tokens is not None
@@ -210,7 +219,8 @@ def forward(
     seq = plan.tp if s > 1 else None
     x = plan.constrain(x, plan.dp, seq, None)
     x, new_cache = trunk_apply(
-        params, cfg, x, positions, plan, cache, cache_pos, remat, block_table
+        params, cfg, x, positions, plan, cache, cache_pos, remat, block_table,
+        decode_chunk,
     )
     x = L.norm_apply(params["final_norm"], x)
     if cfg.tie_embeddings:

@@ -1,6 +1,6 @@
-from repro.serve.engine import ServeEngine, ServeConfig
+from repro.serve.engine import ServeEngine, ServeConfig, SpecConfig
 from repro.serve.request import Request, SubmitRequest
-from repro.serve.sampling import sample_token
+from repro.serve.sampling import sample_token, spec_accept
 from repro.serve.scheduler import BlockAllocator, ContinuousScheduler
 
 __all__ = [
@@ -9,6 +9,8 @@ __all__ = [
     "Request",
     "ServeConfig",
     "ServeEngine",
+    "SpecConfig",
     "SubmitRequest",
     "sample_token",
+    "spec_accept",
 ]

@@ -42,12 +42,25 @@ its own cache offset — total prefill traces are bounded by the bucket set,
 not by distinct prompt lengths), and ``_slot_segment`` (a ``lax.scan`` of S
 masked decode steps over all slots, carry ``(cache, tok, pos, done, key)``
 with per-slot ``active``/``limit`` inputs).  All donate the slot cache, so
-device state persists across segments without copies.  Under
-``ServeConfig.kv_layout="paged"`` the same programs exist as paged twins
+device state persists across segments without copies.  Every slot program
+is emitted by ONE builder parametrized over the cache layout: under
+``ServeConfig.kv_layout="paged"`` the same bodies run over a fixed block
+pool + host-policy block table instead of per-slot ``max_len`` rows
 (``_prefill_slot_paged`` / ``_prefill_slots_paged`` /
-``_slot_segment_paged`` / ``_slot_segment_while_paged``) over a fixed block
-pool + host-policy block table instead of per-slot ``max_len`` rows —
-greedy outputs stay bit-identical to the dense slot path.  See
+``_slot_segment_paged`` / ``_slot_segment_while_paged``) — greedy outputs
+stay bit-identical to the dense slot path.
+
+Speculative decoding (``ServeConfig.spec = SpecConfig(k, draft=…)``, PR 5):
+the scheduler's segments become draft-and-verify rounds
+(``_slot_spec_segment[_while][_paged]``).  Each round drafts ``k`` tokens
+with a cheap drafter derived from the served weights (a sparse SONIC
+conversion, or a layer-truncated prefix reading the verifier's own KV),
+verifies all of them in ONE ``decode_chunk`` forward of the served model —
+each window row bitwise the computation sequential decode would do — and
+emits the longest matching prefix plus the verifier's bonus token (1..k+1
+tokens/step).  Rejected tokens cost nothing to undo: rollback is cursor
+truncation, on the dense rows and on the paged block table alike.  Greedy
+speculative outputs are bit-identical to the plain scheduler.  See
 docs/serving.md.
 """
 from __future__ import annotations
@@ -59,10 +72,52 @@ import jax
 import jax.numpy as jnp
 
 from repro.sharding.mesh import MeshPlan
-from repro.serve.sampling import sample_token
+from repro.serve.sampling import sample_token, spec_accept
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding: draft ``k`` tokens per step with a cheap
+    drafter, verify them in ONE ``decode_chunk`` forward of the served
+    model, emit the longest matching prefix (+ the verifier's bonus token),
+    and roll the KV cursor back over the rejected tail.
+
+    ``draft`` selects the drafter, always derived from the served weights
+    (no second checkpoint):
+
+      "self"        sparse-mode conversion of the same weights
+                    (``core.sonic_layers.sparse_draft_params``: balanced
+                    block pruning at ``draft_sparsity`` + optional
+                    ``draft_clusters``-entry codebook) — the SONIC economics
+                    applied to drafting: on sparse hardware the drafter
+                    moves (1 − sparsity) of the verifier's weight traffic.
+                    ``draft_sparsity=0.0`` makes the conversion exact (the
+                    full-acceptance oracle used in tests).
+      "truncate:N"  the first N layers of the served stack + the shared
+                    final norm / LM head (layer-skipping self-drafter).
+                    Because the prefix weights are identical, the drafter
+                    reads a slice of the verifier's own KV cache — no
+                    drafter prefill, no second cache to roll back.
+
+    Greedy only (``temperature == 0``): acceptance is exact-match, so the
+    emitted stream is bit-identical to non-speculative decoding.
+    """
+
+    k: int = 4
+    draft: str = "self"  # "self" | "truncate:N"
+    draft_sparsity: float = 0.75
+    draft_clusters: int = 0  # 0 ⇒ no codebook quantization of the drafter
+
+    def __post_init__(self):
+        assert self.k >= 1, self.k
+        assert 0.0 <= self.draft_sparsity < 1.0, self.draft_sparsity
+        if self.draft != "self":
+            assert self.draft.startswith("truncate:") and int(
+                self.draft.split(":", 1)[1]
+            ) >= 1, f"draft must be 'self' or 'truncate:N', got {self.draft!r}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,12 +134,18 @@ class ServeConfig:
     # (greedy outputs bit-identical; admission gated on free blocks).
     kv_layout: str = "dense"  # "dense" | "paged"
     block_len: int = 16
+    # speculative decoding for the continuous scheduler (PR 5); None = plain
+    # one-token-per-step decode.  Families without chunk-resume (and the
+    # int8-quantized cache) fall back with ``engine.spec_skip_reason``.
+    spec: SpecConfig | None = None
 
 
 _SLOT_PROGRAMS = ("prefill_slot", "prefill_slots", "slot_segment",
                   "slot_segment_while", "prefill_slot_paged",
                   "prefill_slots_paged", "slot_segment_paged",
-                  "slot_segment_while_paged")
+                  "slot_segment_while_paged", "slot_spec_segment",
+                  "slot_spec_segment_while", "slot_spec_segment_paged",
+                  "slot_spec_segment_while_paged")
 
 
 class ServeEngine:
@@ -108,6 +169,64 @@ class ServeEngine:
             )
         self.arch, self.params, self.plan, self.sc = arch, params, plan, sc
         self.cfg = cfg or arch.cfg
+
+        # ------------------------- speculative decoding (drafter resolution)
+        #
+        # ``sc.spec`` attaches a drafter derived from the served weights.
+        # Families whose cache cannot chunk-resume / cursor-roll-back (and
+        # the int8-quantized cache, whose verify window would attend
+        # dequantized values) fall back to plain decode with the reason in
+        # ``spec_skip_reason`` — mirroring the chunked-prefill fallback.
+        self.spec = sc.spec
+        self.spec_skip_reason = ""
+        self.draft_params = None
+        self.draft_cfg = None
+        if sc.spec is not None:
+            assert sc.temperature <= 0.0, (
+                "speculative decoding is greedy-only for now: acceptance is "
+                "exact-match against the greedy verifier (rejection-sampling "
+                "speculation for temperature > 0 is a ROADMAP item)"
+            )
+            if plan.cache_quant_int8:
+                reason = ("speculative verification is not wired for the "
+                          "int8-quantized KV cache (the verify window must "
+                          "recompute exactly what sequential decode would; "
+                          "attending dequantized values breaks the "
+                          "bit-identical greedy contract)")
+            else:
+                reason = arch.spec_decode_skip_reason()
+            if reason:
+                self.spec = None
+                self.spec_skip_reason = reason
+                log.warning(
+                    "speculative decoding disabled — falling back to plain "
+                    "decode: %s", reason,
+                )
+            else:
+                if sc.kv_layout == "paged":
+                    # a retired slot's whole verify window lands in its one
+                    # scratch block; offsets stay distinct (unique_indices)
+                    # only while the window fits a block
+                    assert sc.spec.k < sc.block_len, (
+                        f"spec.k {sc.spec.k} must be < block_len "
+                        f"{sc.block_len} (the K+1-token verify window of a "
+                        f"masked slot must fit its scratch block)"
+                    )
+                from repro.core.sonic_layers import (
+                    sparse_draft_params, truncated_draft_params,
+                )
+
+                if self.spec.draft == "self":
+                    self.draft_cfg = self.cfg
+                    self.draft_params = sparse_draft_params(
+                        params, self.spec.draft_sparsity,
+                        num_clusters=self.spec.draft_clusters,
+                    )
+                else:  # "truncate:N"
+                    n = int(self.spec.draft.split(":", 1)[1])
+                    assert 1 <= n <= self.cfg.n_layers, (n, self.cfg.n_layers)
+                    self.draft_cfg = self.cfg.replace(n_layers=n)
+                    self.draft_params = truncated_draft_params(params, n)
         # traced / called counters: tests assert no-recompile and
         # one-program-per-loop from these.
         self.trace_counts: dict[str, int] = {
@@ -197,78 +316,126 @@ class ServeEngine:
         #
         # The slot cache is one ordinary cache pytree of batch = n_slots;
         # each request owns one axis-1 row of every leaf for its lifetime
-        # (``registry.write_cache_slot`` contract).  Both programs donate the
+        # (``registry.write_cache_slot`` contract).  All programs donate the
         # slot cache, so the scheduler's device state is updated in place
         # across admissions and segments instead of being copied.
+        #
+        # Every program below is built ONCE by a builder parametrized over
+        # the cache layout (dense slot rows vs paged block pool) — the
+        # layout-specific lines are the cache plumbing (gather/scatter vs
+        # block table), everything else (sampling, tok/pos/done bookkeeping,
+        # segment loops, speculative accept) is shared, so the two layouts
+        # cannot drift apart and the speculative programs don't fork the
+        # copy-paste a third time.
 
-        def prefill_slot(params, cache, tok, pos, done, prompt, slot, key):
-            """Prefill ONE request (1, P) and install it into slot ``slot``.
+        def _mk_prefill_slot(paged):
+            name = "prefill_slot_paged" if paged else "prefill_slot"
 
-            Runs at the request's own prompt length — ragged workloads never
-            pad one prompt against another (one trace per distinct P; slot
-            and max_new are traced scalars, so neither retraces).  The whole
-            slot state (cache + tok/pos/done vectors) is donated and updated
-            on device; the host only reads the first sampled token back (one
-            bundled fetch per admit round in the scheduler).
-            """
-            self.trace_counts["prefill_slot"] += 1
-            from repro.models.registry import write_cache_slot
+            def prefill_slot(params, cache, tok, pos, done, prompt, slot,
+                             *rest):
+                """Prefill ONE request (1, P) and install it into ``slot``.
 
-            small = arch.init_cache(1, sc.max_len, plan, cfg=self.cfg)
-            logits, small = arch.forward(
-                params, plan, cfg=self.cfg, tokens=prompt, cache=small
-            )
-            first = sample(logits[:, -1], key)[0]
-            p_len = prompt.shape[1]
-            return (
-                write_cache_slot(cache, small, slot),
-                tok.at[slot].set(first),
-                pos.at[slot].set(p_len),
-                done.at[slot].set(False),
-                first,
-            )
+                Runs at the request's own prompt length — ragged workloads
+                never pad one prompt against another (one trace per distinct
+                P; slot and max_new are traced scalars, so neither
+                retraces).  Dense: the batch-1 cache is written into the
+                slot row (``write_cache_slot``).  Paged (extra ``bt_row``
+                arg before ``key``): the prefill cache is padded up to whole
+                blocks and scattered into the physical blocks the row maps
+                (``write_cache_block``).  The whole slot state is donated;
+                the host only reads the first sampled token back.
+                """
+                self.trace_counts[name] += 1
+                key = rest[-1]
+                p_len = prompt.shape[1]
+                if paged:
+                    bt_row = rest[0]
+                    nb = -(-p_len // sc.block_len)  # ceil — static per trace
+                    small = arch.init_cache(1, nb * sc.block_len, plan,
+                                            cfg=self.cfg)
+                else:
+                    small = arch.init_cache(1, sc.max_len, plan, cfg=self.cfg)
+                logits, small = arch.forward(
+                    params, plan, cfg=self.cfg, tokens=prompt, cache=small
+                )
+                first = sample(logits[:, -1], key)[0]
+                if paged:
+                    from repro.models.registry import write_cache_block
 
-        def prefill_slots(params, cache, tok, pos, done, prompts, slots,
-                          starts, last_local, key):
-            """Prefill ONE chunk for up to B requests into B slot rows in
-            one launch (the batched/bucketed admission path).
+                    cache = write_cache_block(cache, small, bt_row[:nb])
+                else:
+                    from repro.models.registry import write_cache_slot
 
-            ``prompts`` is (B, Cb) with B fixed at the scheduler's slot
-            count and Cb drawn from a small geometric bucket set, so total
-            prefill traces are bounded by ``n_buckets`` instead of by
-            distinct prompt lengths.  Per-row vectors: ``slots`` (target
-            slot; an out-of-range id marks a masked dummy row — its gather
-            clips and every one of its writes drops), ``starts`` (resume
-            offset: 0 for a first chunk, multiples of the chunk length
-            after), ``last_local`` (index of the row's last REAL token
-            inside the chunk — bucket padding sits after it and is causally
-            invisible).  The B slot rows are gathered, one chunk-resume
-            forward runs over them, and the updated rows scatter back
-            (``registry.gather_cache_slots``/``write_cache_slots``); first
-            tokens are sampled from each row's last-real-token logits and
-            only consumed by the host for final chunks.
-            """
-            self.trace_counts["prefill_slots"] += 1
-            from repro.models.registry import (
-                gather_cache_slots, write_cache_slots,
-            )
+                    cache = write_cache_slot(cache, small, slot)
+                return (
+                    cache,
+                    tok.at[slot].set(first),
+                    pos.at[slot].set(p_len),
+                    done.at[slot].set(False),
+                    first,
+                )
 
-            small = gather_cache_slots(cache, slots)
-            logits, small = arch.forward(
-                params, plan, cfg=self.cfg, tokens=prompts, cache=small,
-                cache_pos=starts,
-            )
-            last = jnp.take_along_axis(
-                logits, last_local[:, None, None], axis=1
-            )[:, 0]  # (B, V)
-            firsts = sample(last, key)
-            return (
-                write_cache_slots(cache, small, slots),
-                tok.at[slots].set(firsts, mode="drop"),
-                pos.at[slots].set(starts + last_local + 1, mode="drop"),
-                done.at[slots].set(False, mode="drop"),
-                firsts,
-            )
+            return prefill_slot
+
+        def _mk_prefill_slots(paged):
+            name = "prefill_slots_paged" if paged else "prefill_slots"
+
+            def prefill_slots(params, cache, tok, pos, done, prompts, slots,
+                              starts, last_local, *rest):
+                """Prefill ONE chunk for up to B requests into B slot rows
+                in one launch (the batched/bucketed admission path).
+
+                ``prompts`` is (B, Cb) with B fixed at the scheduler's slot
+                count and Cb drawn from a small geometric bucket set, so
+                total prefill traces are bounded by the bucket set instead
+                of by distinct prompt lengths.  Per-row vectors: ``slots``
+                (target slot; an out-of-range id marks a masked dummy row —
+                its gather clips and every one of its writes drops),
+                ``starts`` (resume offset), ``last_local`` (index of the
+                row's last REAL token inside the chunk — bucket padding sits
+                after it and is causally invisible).  Dense: the B slot rows
+                are gathered, one chunk-resume forward runs over them, the
+                updated rows scatter back (``registry.gather_cache_slots`` /
+                ``write_cache_slots``).  Paged (extra ``bt_rows`` before
+                ``key``): the chunk scatters straight into each row's mapped
+                physical blocks at its block-table offsets — dummy rows
+                carry DISTINCT out-of-range physical ids so their writes
+                drop without aliasing a live block.  First tokens are
+                sampled from each row's last-real-token logits and only
+                consumed by the host for final chunks.
+                """
+                self.trace_counts[name] += 1
+                key = rest[-1]
+                if paged:
+                    bt_rows = rest[0]
+                    logits, cache = arch.forward(
+                        params, plan, cfg=self.cfg, tokens=prompts,
+                        cache=cache, cache_pos=starts, block_table=bt_rows,
+                    )
+                else:
+                    from repro.models.registry import (
+                        gather_cache_slots, write_cache_slots,
+                    )
+
+                    small = gather_cache_slots(cache, slots)
+                    logits, small = arch.forward(
+                        params, plan, cfg=self.cfg, tokens=prompts,
+                        cache=small, cache_pos=starts,
+                    )
+                    cache = write_cache_slots(cache, small, slots)
+                last = jnp.take_along_axis(
+                    logits, last_local[:, None, None], axis=1
+                )[:, 0]  # (B, V)
+                firsts = sample(last, key)
+                return (
+                    cache,
+                    tok.at[slots].set(firsts, mode="drop"),
+                    pos.at[slots].set(starts + last_local + 1, mode="drop"),
+                    done.at[slots].set(False, mode="drop"),
+                    firsts,
+                )
+
+            return prefill_slots
 
         def slot_step(params, cache, tok, pos, done, key, active, limit,
                       block_table=None):
@@ -302,28 +469,96 @@ class ServeEngine:
             done = done | (active & (pos >= limit))
             return cache, tok, pos, done, key, emitted
 
-        def segment_scan_impl(n_steps, params, cache, tok, pos, done, key,
-                              active, limit, block_table):
-            """Shared body of the dense/paged scan segments — one place to
-            change segment semantics, so the layouts cannot drift apart."""
+        def spec_step(params, draft_params, cache, tok, pos, done, key,
+                      active, limit, block_table=None):
+            """One speculative draft-and-verify step over all slots.
+
+            Draft: ``spec.k`` sequential decode steps of the drafter.  The
+            drafter runs FROM THE VERIFIER'S KV — the self-sparse drafter
+            (same topology) threads the slot cache itself, writing its
+            in-flight k/v at ``pos .. pos+i``; the truncated drafter reads a
+            local slice of the first ``n_draft`` layers (identical prefix
+            weights ⇒ identical prefix KV, so the slice IS its correct
+            cache) that is dropped after drafting.  Neither needs a prefill
+            or a rollback of its own: every position a drafter touches is
+            overwritten by the verify window below.
+
+            Verify: ONE ``decode_chunk`` forward of the served model over
+            the window ``[tok, d_1 .. d_k]`` at ``pos .. pos+k`` — each row
+            bitwise the computation sequential decode would do — then
+            greedy longest-prefix acceptance (``sampling.spec_accept``:
+            eos and token-budget edges emulate ``slot_step`` exactly).
+
+            Rollback: pure cursor truncation — ``pos`` advances only over
+            the accepted prefix; rejected-tail KV stays in the cache (dense
+            rows or mapped blocks) but every read masks positions beyond
+            the querying token, and the next window overwrites it.  Masked
+            slots flow through shape-stably like ``slot_step``: pos frozen,
+            token held, emissions −1 (their window writes land at their
+            frozen pos / scratch block and are never read).
+            """
+            k_spec = self.spec.k
+            n_draft = self.draft_cfg.n_layers
+            fkw = {} if block_table is None else {"block_table": block_table}
+            live = active & ~done
+            key, _sub = jax.random.split(key)  # keep slot_step's key cadence
+
+            full_depth = n_draft == self.cfg.n_layers
+            d_cache = cache if full_depth else jax.tree_util.tree_map(
+                lambda a: a[:n_draft], cache
+            )
+            cur = tok
+            window = [tok]
+            for i in range(k_spec):
+                dlogits, d_cache = arch.forward(
+                    draft_params, plan, cfg=self.draft_cfg,
+                    tokens=cur[:, None], cache=d_cache, cache_pos=pos + i,
+                    **fkw,
+                )
+                cur = jnp.argmax(dlogits[:, 0], axis=-1).astype(jnp.int32)
+                window.append(cur)
+            window = jnp.stack(window, axis=1)  # (B, K+1)
+            if full_depth:
+                cache = d_cache  # drafter k/v lands in-place; verify overwrites
+
+            logits, cache = arch.forward(
+                params, plan, cfg=self.cfg, tokens=window, cache=cache,
+                cache_pos=pos, decode_chunk=True, **fkw,
+            )
+            verify = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, K+1)
+            emitted, n_emit, last = spec_accept(
+                window, verify, live, pos, limit, sc.eos_token
+            )
+            tok = jnp.where(live, last, tok)
+            pos = pos + n_emit  # n_emit == 0 where not live → pos frozen
+            stop = pos >= limit
+            if sc.eos_token >= 0:
+                stop = stop | (last == sc.eos_token)
+            done = done | (live & stop)
+            return cache, tok, pos, done, key, emitted  # emitted (B, K+1)
+
+        def segment_scan_impl(n_steps, step, cache, tok, pos, done, key):
+            """Shared scan-segment body (dense/paged × plain/speculative):
+            one place to change segment semantics, so the four programs
+            cannot drift apart.  ``step`` emits (B,) tokens per step on the
+            plain path and (B, K+1) on the speculative one — the stacked
+            output comes back (n_slots, n_steps[, K+1])."""
 
             def body(carry, _):
-                cache, tok, pos, done, key, emitted = slot_step(
-                    params, *carry, active, limit, block_table
-                )
+                cache, tok, pos, done, key, emitted = step(*carry)
                 return (cache, tok, pos, done, key), emitted
 
             (cache, tok, pos, done, key), toks = jax.lax.scan(
                 body, (cache, tok, pos, done, key), length=n_steps
             )
-            return toks.T, cache, tok, pos, done, key  # toks (n_slots, S)
+            return jnp.moveaxis(toks, 0, 1), cache, tok, pos, done, key
 
-        def segment_while_impl(n_steps, params, cache, tok, pos, done, key,
-                               active, limit, stop_on_free, block_table):
-            """Shared body of the dense/paged while segments (early exit).
+        def segment_while_impl(n_steps, step, cache, tok, pos, done, key,
+                               active, stop_on_free, emit_tail):
+            """Shared while-segment body (early exit).
 
-            Same per-step math (``slot_step``, so greedy outputs are
-            bit-identical to the scan segment), but the loop stops as soon
+            Same per-step math as the scan flavour (identical ``step``, so
+            greedy outputs are bit-identical), but the loop stops as soon
             as (a) every active slot is done, or (b) any slot newly finished
             while ``stop_on_free`` is set (the scheduler passes
             queue-non-empty) — so a freed slot returns to the host for
@@ -332,7 +567,7 @@ class ServeEngine:
             columns come back as −1.
             """
             n_slots = tok.shape[0]
-            out0 = jnp.full((n_slots, n_steps), -1, jnp.int32)
+            out0 = jnp.full((n_slots, n_steps) + emit_tail, -1, jnp.int32)
 
             def cond(st):
                 i, _cache, _tok, _pos, done, _key, _out = st
@@ -342,11 +577,13 @@ class ServeEngine:
 
             def loop_body(st):
                 i, cache, tok, pos, done, key, out = st
-                cache, tok, pos, done, key, emitted = slot_step(
-                    params, cache, tok, pos, done, key, active, limit,
-                    block_table,
+                cache, tok, pos, done, key, emitted = step(
+                    cache, tok, pos, done, key
                 )
-                out = jax.lax.dynamic_update_slice(out, emitted[:, None], (0, i))
+                upd = emitted.reshape((n_slots, 1) + emit_tail)
+                out = jax.lax.dynamic_update_slice(
+                    out, upd, (0, i) + (0,) * len(emit_tail)
+                )
                 return i + 1, cache, tok, pos, done, key, out
 
             st = jax.lax.while_loop(
@@ -356,109 +593,79 @@ class ServeEngine:
             _, cache, tok, pos, done, key, out = st
             return out, cache, tok, pos, done, key
 
-        def slot_segment(n_steps, params, cache, tok, pos, done, key,
-                         active, limit):
-            """Run ``n_steps`` decode steps over every slot (fixed capacity).
+        def _mk_segment(flavor, paged, spec):
+            """Build one compiled segment program.
 
-            Carry on device: (cache, tok, pos, done, key); ``active`` (slot
-            holds a live request — host-owned, retirement clears it) and
-            ``limit`` (last write position = prompt_len + max_new − 1) are
-            per-slot segment inputs.  Step semantics: ``slot_step``.
+            Plain: ``n_steps`` masked decode steps over every slot, carry
+            (cache, tok, pos, done, key) on device; ``active`` (slot holds a
+            live request) and ``limit`` (last write position = prompt_len +
+            max_new − 1) are host-policy inputs, the while flavour adds
+            ``stop_on_free`` and the paged layout appends ``block_table``.
+            Speculative: same signature with ``draft_params`` after
+            ``params``; each step is a draft-and-verify round emitting
+            1..K+1 tokens per live slot.
             """
-            self.trace_counts["slot_segment"] += 1
-            return segment_scan_impl(n_steps, params, cache, tok, pos, done,
-                                     key, active, limit, None)
+            scan = flavor == "scan"
+            name = (("slot_spec_segment" if spec else "slot_segment")
+                    + ("" if scan else "_while") + ("_paged" if paged else ""))
 
-        def slot_segment_while(n_steps, params, cache, tok, pos, done, key,
-                               active, limit, stop_on_free):
-            """Early-exit segment over the dense slot cache
-            (``segment_while_impl``)."""
-            self.trace_counts["slot_segment_while"] += 1
-            return segment_while_impl(n_steps, params, cache, tok, pos, done,
-                                      key, active, limit, stop_on_free, None)
+            def segment(n_steps, params, *args):
+                self.trace_counts[name] += 1
+                if spec:
+                    draft_params, args = args[0], args[1:]
+                cache, tok, pos, done, key, active, limit, *rest = args
+                block_table = rest[-1] if paged else None
+                if spec:
+                    def step(c, t, p, d, k2):
+                        return spec_step(params, draft_params, c, t, p, d,
+                                         k2, active, limit, block_table)
 
-        # ------------- paged slot programs (kv_layout="paged", scheduler.py)
-        #
-        # Same admit/segment/retire machine over a block pool instead of
-        # per-slot max_len rows: prefill runs on a dense batch-1 cache padded
-        # to whole blocks and ``write_cache_block`` scatters it into the
-        # slot's mapped physical blocks; decode steps scatter one token into
-        # the mapped block and attend over the gathered virtual cache
-        # (``layers.paged_cache_*``).  The block table is host policy like
-        # ``active``/``limit`` — uploaded per call, never part of the carry.
+                    emit_tail = (self.spec.k + 1,)
+                else:
+                    def step(c, t, p, d, k2):
+                        return slot_step(params, c, t, p, d, k2, active,
+                                         limit, block_table)
 
-        def prefill_slot_paged(params, pool, tok, pos, done, prompt, slot,
-                               bt_row, key):
-            """Paged twin of ``prefill_slot``: prefill ONE request and
-            install its KV into the physical blocks ``bt_row[:nb]`` maps.
+                    emit_tail = ()
+                if scan:
+                    return segment_scan_impl(n_steps, step, cache, tok, pos,
+                                             done, key)
+                stop_on_free = rest[0]
+                return segment_while_impl(n_steps, step, cache, tok, pos,
+                                          done, key, active, stop_on_free,
+                                          emit_tail)
 
-            The batch-1 prefill cache is allocated at the prompt length
-            padded up to whole blocks (positions past the prompt hold zeros
-            until decode overwrites them — always masked until then), so one
-            trace per distinct prompt length, exactly like the dense path.
-            """
-            self.trace_counts["prefill_slot_paged"] += 1
-            from repro.models.registry import write_cache_block
+            return segment, name
 
-            bl = sc.block_len
-            p_len = prompt.shape[1]
-            nb = -(-p_len // bl)  # ceil — static per trace
-            small = arch.init_cache(1, nb * bl, plan, cfg=self.cfg)
-            logits, small = arch.forward(
-                params, plan, cfg=self.cfg, tokens=prompt, cache=small
+        # -- build + (optionally) jit every slot program for both layouts.
+        # Paged programs run the same admit/segment/retire machine over a
+        # block pool instead of per-slot max_len rows; the block table is
+        # host policy like ``active``/``limit`` — uploaded per call, never
+        # part of the carry.  Speculative segments exist only when a spec
+        # config survived drafter resolution.
+        slot_progs: dict[str, tuple[Any, dict]] = {}
+        for paged in (False, True):
+            sfx = "_paged" if paged else ""
+            # donate the whole device slot state (cache + tok/pos/done) so
+            # admissions and segments update it in place across calls
+            slot_progs["prefill_slot" + sfx] = (
+                _mk_prefill_slot(paged), dict(donate_argnums=(1, 2, 3, 4))
             )
-            first = sample(logits[:, -1], key)[0]
-            return (
-                write_cache_block(pool, small, bt_row[:nb]),
-                tok.at[slot].set(first),
-                pos.at[slot].set(p_len),
-                done.at[slot].set(False),
-                first,
+            slot_progs["prefill_slots" + sfx] = (
+                _mk_prefill_slots(paged), dict(donate_argnums=(1, 2, 3, 4))
             )
-
-        def prefill_slots_paged(params, pool, tok, pos, done, prompts, slots,
-                                starts, last_local, bt_rows, key):
-            """Paged twin of ``prefill_slots``: the chunk's K/V scatters
-            straight into each row's mapped physical blocks at its
-            block-table offsets (``layers.paged_cache_write_chunk``) and the
-            queries attend over the gathered virtual caches — no dense
-            staging cache.  ``bt_rows`` is (B, max_blocks): real rows carry
-            their slot's table row; dummy rows carry DISTINCT out-of-range
-            physical ids so their writes drop without aliasing a live
-            block.
-            """
-            self.trace_counts["prefill_slots_paged"] += 1
-            logits, pool = arch.forward(
-                params, plan, cfg=self.cfg, tokens=prompts, cache=pool,
-                cache_pos=starts, block_table=bt_rows,
-            )
-            last = jnp.take_along_axis(
-                logits, last_local[:, None, None], axis=1
-            )[:, 0]
-            firsts = sample(last, key)
-            return (
-                pool,
-                tok.at[slots].set(firsts, mode="drop"),
-                pos.at[slots].set(starts + last_local + 1, mode="drop"),
-                done.at[slots].set(False, mode="drop"),
-                firsts,
-            )
-
-        def slot_segment_paged(n_steps, params, pool, tok, pos, done, key,
-                               active, limit, block_table):
-            """``slot_segment`` over a paged pool (same step math)."""
-            self.trace_counts["slot_segment_paged"] += 1
-            return segment_scan_impl(n_steps, params, pool, tok, pos, done,
-                                     key, active, limit, block_table)
-
-        def slot_segment_while_paged(n_steps, params, pool, tok, pos, done,
-                                     key, active, limit, stop_on_free,
-                                     block_table):
-            """``slot_segment_while`` over a paged pool (same exit rule)."""
-            self.trace_counts["slot_segment_while_paged"] += 1
-            return segment_while_impl(n_steps, params, pool, tok, pos, done,
-                                      key, active, limit, stop_on_free,
-                                      block_table)
+            for flavor in ("scan", "while"):
+                fn, nm = _mk_segment(flavor, paged, spec=False)
+                slot_progs[nm] = (
+                    fn, dict(static_argnums=(0,), donate_argnums=(2, 3, 4, 5))
+                )
+                if self.spec is not None:
+                    fn, nm = _mk_segment(flavor, paged, spec=True)
+                    # draft_params shifts the donated slot state right by one
+                    slot_progs[nm] = (
+                        fn,
+                        dict(static_argnums=(0,), donate_argnums=(3, 4, 5, 6)),
+                    )
 
         if sc.jit:
             self._prefill = jax.jit(prefill)
@@ -469,47 +676,15 @@ class ServeEngine:
             self._decode_loop = jax.jit(
                 loop_fn, static_argnums=(0,), donate_argnums=(2,)
             )
-            # donate the whole device slot state (cache + tok/pos/done) so
-            # admissions and segments update it in place across calls
-            self._prefill_slot = jax.jit(
-                prefill_slot, donate_argnums=(1, 2, 3, 4)
-            )
-            self._prefill_slots = jax.jit(
-                prefill_slots, donate_argnums=(1, 2, 3, 4)
-            )
-            self._slot_segment = jax.jit(
-                slot_segment, static_argnums=(0,), donate_argnums=(2, 3, 4, 5)
-            )
-            self._slot_segment_while = jax.jit(
-                slot_segment_while, static_argnums=(0,),
-                donate_argnums=(2, 3, 4, 5),
-            )
-            self._prefill_slot_paged = jax.jit(
-                prefill_slot_paged, donate_argnums=(1, 2, 3, 4)
-            )
-            self._prefill_slots_paged = jax.jit(
-                prefill_slots_paged, donate_argnums=(1, 2, 3, 4)
-            )
-            self._slot_segment_paged = jax.jit(
-                slot_segment_paged, static_argnums=(0,),
-                donate_argnums=(2, 3, 4, 5),
-            )
-            self._slot_segment_while_paged = jax.jit(
-                slot_segment_while_paged, static_argnums=(0,),
-                donate_argnums=(2, 3, 4, 5),
-            )
+            for nm, (fn, jkw) in slot_progs.items():
+                setattr(self, "_" + nm, jax.jit(fn, **jkw))
         else:
             self._prefill, self._decode = prefill, decode
             self._decode_loop = (
                 decode_loop if sc.loop != "while" else decode_loop_while
             )
-            self._prefill_slot, self._slot_segment = prefill_slot, slot_segment
-            self._prefill_slots = prefill_slots
-            self._slot_segment_while = slot_segment_while
-            self._prefill_slot_paged = prefill_slot_paged
-            self._prefill_slots_paged = prefill_slots_paged
-            self._slot_segment_paged = slot_segment_paged
-            self._slot_segment_while_paged = slot_segment_while_paged
+            for nm, (fn, _) in slot_progs.items():
+                setattr(self, "_" + nm, fn)
 
     # ------------------------------------------------------------- public
 

@@ -1,8 +1,10 @@
-"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus) — plus the
+greedy speculative-acceptance rule (``spec_accept``).
 
 Every path is pure jnp with static-shape control flow only, so the sampler
-can live *inside* the compiled decode loop (``lax.scan`` body in
-``repro.serve.engine``) — no host round-trip per sampled token.
+(and the acceptance math) can live *inside* the compiled decode loop
+(``lax.scan`` body in ``repro.serve.engine``) — no host round-trip per
+sampled token.
 """
 from __future__ import annotations
 
@@ -33,3 +35,44 @@ def sample_token(
         thresh = jnp.min(jnp.where(kept, srt, jnp.inf), axis=-1, keepdims=True)
         lf = jnp.where(lf < thresh, -jnp.inf, lf)
     return jax.random.categorical(key, lf).astype(jnp.int32)
+
+
+def spec_accept(
+    window: jax.Array,  # (B, K+1) int32 — [cur_tok, d_1 .. d_K] fed to verify
+    verify: jax.Array,  # (B, K+1) int32 — greedy verifier token per window row
+    live: jax.Array,  # (B,) bool — slot is active and not done
+    pos: jax.Array,  # (B,) int32 — cache position of cur_tok (window row 0)
+    limit: jax.Array,  # (B,) int32 — last write position (token budget edge)
+    eos_token: int,  # < 0 ⇒ never stop on eos
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Greedy longest-matching-prefix acceptance for speculative decoding.
+
+    Emulates K+1 sequential greedy decode steps exactly: row i of the verify
+    window is what the non-speculative scheduler's step would emit after the
+    context ``… cur_tok d_1 .. d_i``, so token i may be emitted iff every
+    earlier emission (a) matched the draft that was fed as the next window
+    token, (b) was not eos, and (c) left token budget (``pos + i < limit`` —
+    the same ``pos >= limit`` retirement edge as ``slot_step``).  A live slot
+    always emits ≥ 1 token (row 0 needs no draft to be valid); emission count
+    is therefore 1..K+1 per step and the emitted sequence is bit-identical
+    to what sequential decoding would produce.
+
+    Returns ``(emitted, n_emit, last)``: ``emitted`` (B, K+1) is the verify
+    tokens with non-emitted entries set to −1 (the scheduler's drop marker),
+    ``n_emit`` (B,) the per-slot emission count (0 for non-live slots), and
+    ``last`` (B,) the final emitted token (the next step's input; undefined
+    where ``n_emit == 0``).
+    """
+    b, kp1 = window.shape
+    steps = jnp.arange(1, kp1, dtype=pos.dtype)  # continuation indices 1..K
+    cont = window[:, 1:] == verify[:, :-1]  # (a) draft matched
+    if eos_token >= 0:
+        cont &= verify[:, :-1] != eos_token  # (b) no eos before it
+    cont &= pos[:, None] + steps[None, :] < limit[:, None]  # (c) budget left
+    prefix = jnp.cumprod(cont.astype(jnp.int32), axis=1).astype(bool)
+    emit = jnp.concatenate([live[:, None], live[:, None] & prefix], axis=1)
+    n_emit = emit.sum(axis=1).astype(pos.dtype)
+    emitted = jnp.where(emit, verify, -1)
+    last_idx = jnp.clip(n_emit - 1, 0, kp1 - 1)
+    last = jnp.take_along_axis(verify, last_idx[:, None], axis=1)[:, 0]
+    return emitted, n_emit, last

@@ -57,6 +57,17 @@ has a unique (block, offset) target (``layers.paged_cache_write`` exploits
 this with a ``unique_indices`` scatter).  Greedy outputs are bit-identical
 to the dense slot layout; the win is the memory ceiling — pool bytes track
 the live-context sum, not ``n_slots × max_len``.
+
+Speculative decoding (``ServeConfig.spec``): segments become draft-and-
+verify rounds emitting 1..k+1 tokens per live slot per step
+(``engine.spec_step``); the device-side acceptance already enforces eos and
+token-budget edges, so the host loop consumes the flattened emission stream
+exactly as before — retirement, streaming, and stats just account for the
+variable per-step width (``accepted_hist``).  Requests need ``spec.k``
+positions of max_len headroom (and ``spec.k`` extra mapped block capacity
+under the paged layout) for the rejected-tail overshoot the cursor rollback
+truncates.  Families that cannot chunk-resume (and int8-quant KV) fall back
+to plain decode with the reason in ``stats["spec_skip_reason"]``.
 """
 from __future__ import annotations
 
@@ -133,9 +144,16 @@ class ContinuousScheduler:
         n_blocks: int | None = None,
         prefill_chunk: int = 0,
         prefill_buckets: int = 4,
+        prefill_token_budget: int = 0,
         clock: Callable[[], float] = time.perf_counter,
     ):
         assert n_slots >= 1 and segment_len >= 1, (n_slots, segment_len)
+        # speculative decoding: the engine resolved the drafter (or recorded
+        # why the family/plan cannot run draft-and-verify and fell back);
+        # the scheduler just routes segments to the spec programs and
+        # accounts for 1..k+1 tokens landing per slot per step
+        self.spec = engine.spec
+        self.spec_k = engine.spec.k if engine.spec is not None else 0
         # batched/chunked admission (prefill_chunk > 0): prompts are split
         # into prefill_chunk-sized chunks carried across admit rounds, the
         # final chunk padded up to a geometric bucket set (powers of two
@@ -179,6 +197,15 @@ class ContinuousScheduler:
                 self.prefill_chunk >> i for i in reversed(range(prefill_buckets))
             )
             engine.check_chunked_prefill_contract()
+        # Sarathi-style admit rounds: bound the PREFILL TOKENS advanced per
+        # admit round (0 = the PR 4 policy, one chunk per prefilling slot
+        # per round).  With a budget, a round keeps launching chunk groups —
+        # a long prompt may advance several chunks — until >= budget real
+        # tokens prefilled, then hands over to the decode segment; an admit
+        # round that has advanced nothing yet may overshoot by one chunk,
+        # so a budget below the chunk length still makes progress.
+        assert prefill_token_budget >= 0, prefill_token_budget
+        self.prefill_token_budget = int(prefill_token_budget) if self.chunked else 0
         # slot -> next chunk start offset for requests still prefilling
         # (admitted to a slot, not yet active; chunks advance one per round)
         self._prefill_start: dict[int, int] = {}
@@ -243,14 +270,27 @@ class ContinuousScheduler:
             "chunks_prefilled": 0,
             "prefill_batch_hist": {},  # real rows per launch -> count
             "chunked_skip_reason": self.stats_skip_reason,
+            # Sarathi-style token-budget rounds: real prefill tokens
+            # advanced per admit round (appended once per round that
+            # prefilled anything)
+            "prefill_tokens_per_round": [],
+            # speculative decoding (spec_* only grow when spec is active)
+            "spec_skip_reason": engine.spec_skip_reason,
+            "spec_steps": 0,  # draft-and-verify rounds with >= 1 live slot-step
+            "spec_emitted": 0,  # tokens emitted by those slot-steps
+            "accepted_hist": {},  # tokens emitted per live slot-step -> count
         }
 
     # -------------------------------------------------------------- paged
 
     def _blocks_for(self, req: Request) -> int:
         """Physical blocks a request needs for its whole lifetime: write
-        positions run 0..prompt_len+max_new−1 (all mapped at admission)."""
-        total = req.prompt_len + req.max_new_tokens
+        positions run 0..prompt_len+max_new−1 (all mapped at admission).
+        Under speculative decoding the verify window overshoots the cursor
+        by up to ``spec_k`` rejected-tail tokens, so those positions are
+        mapped too — keeping every window write inside the slot's own
+        blocks (the unique-indices scatter contract)."""
+        total = req.prompt_len + req.max_new_tokens + self.spec_k
         return -(-total // self.block_len)
 
     def _release_blocks(self, slot: int) -> None:
@@ -305,9 +345,13 @@ class ContinuousScheduler:
         p = np.asarray(sub.prompt, np.int32).reshape(-1)
         assert p.size >= 1, "empty prompt"
         assert sub.max_new_tokens >= 1, sub.max_new_tokens
-        assert p.size + sub.max_new_tokens <= self.engine.sc.max_len, (
-            f"prompt {p.size} + max_new {sub.max_new_tokens} exceeds "
-            f"max_len {self.engine.sc.max_len}"
+        # speculative decoding needs spec_k positions of cache headroom: the
+        # verify window writes up to spec_k rejected-tail tokens past the
+        # cursor before rollback truncates them
+        assert p.size + sub.max_new_tokens + self.spec_k <= self.engine.sc.max_len, (
+            f"prompt {p.size} + max_new {sub.max_new_tokens}"
+            + (f" + spec draft window {self.spec_k}" if self.spec_k else "")
+            + f" exceeds max_len {self.engine.sc.max_len}"
         )
         req = Request(
             rid=self._next_rid,
@@ -405,40 +449,68 @@ class ContinuousScheduler:
         return rem, bucket, True
 
     def _admit_chunked(self) -> int:
-        """Batched/bucketed admission: claim free slots, then advance every
-        prefilling slot by ONE chunk this round — same-bucket chunks share
-        one fixed-width ``prefill_slots`` launch (dummy rows carry
-        out-of-range slot/block ids, so their writes drop and the launch
-        shape never varies).  One bundled host→device prompt upload per
-        bucket group and ONE ``device_get`` of first tokens per round;
-        long prompts carry their chunk cursor across rounds, so decode
-        segments interleave with their prefill instead of stalling behind
-        it.  Returns the number of requests that went live (or finished)
-        this round.
+        """Batched/bucketed admission: claim free slots, then advance the
+        prefilling slots by chunks — same-bucket chunks share one
+        fixed-width ``prefill_slots`` launch (dummy rows carry out-of-range
+        slot/block ids, so their writes drop and the launch shape never
+        varies).  One bundled host→device prompt upload per bucket group
+        and ONE ``device_get`` of first tokens per round; long prompts
+        carry their chunk cursor across rounds, so decode segments
+        interleave with their prefill instead of stalling behind it.
+        Returns the number of requests that went live (or finished) this
+        round.
+
+        Interleave policy: with ``prefill_token_budget=N`` (Sarathi-style)
+        the round keeps launching chunk rounds until ≥ N real prefill
+        tokens have advanced, then yields to the decode segment.  Without a
+        budget (PR 4 policy), one chunk per prefilling slot per round while
+        a BATCH of decodes is live; at ≤ 1 live decode there is no batch to
+        protect, so chunk rounds drain back-to-back instead of stretching
+        the prefill across segment round-trips.
         """
         self._claim_free_slots()
         n_live = 0
-        # one chunk per prefilling slot per round while a BATCH of decodes
-        # is live (that's the interleave: running requests keep streaming
-        # between a long prompt's chunks); at ≤1 live decode there is no
-        # batch to protect, so chunk rounds drain back-to-back instead of
-        # stretching the prefill across segment round-trips
+        budget = self.prefill_token_budget
+        spent = 0
         while self._prefill_start:
-            n_live += self._prefill_round()
-            if int(self.active.sum()) > 1:
+            went_live, tokens = self._prefill_round(
+                budget - spent if budget else 0,
+                allow_overshoot=spent == 0,
+            )
+            n_live += went_live
+            spent += tokens
+            if budget:
+                if tokens == 0 or spent >= budget:
+                    break
+            elif int(self.active.sum()) > 1:
                 break
+        if spent:
+            self.stats["prefill_tokens_per_round"].append(spent)
         return n_live
 
-    def _prefill_round(self) -> int:
-        """Advance every prefilling slot by one chunk: bucket-group the
+    def _prefill_round(self, token_budget: int = 0,
+                       allow_overshoot: bool = True) -> tuple[int, int]:
+        """Advance prefilling slots by one chunk each: bucket-group the
         chunks, launch one fixed-shape program per group, fetch all first
         tokens once, and activate/finish the rows whose final chunk landed.
+        With ``token_budget > 0`` only a prefix of the slots (in claim
+        order — FIFO fairness) advances, cut where cumulative real chunk
+        tokens would exceed the budget; when ``allow_overshoot`` (the admit
+        round hasn't advanced anything yet) the first chunk is taken even
+        over budget, so a budget below the chunk length still makes
+        progress.  Returns (requests gone live, real prefill tokens
+        advanced) — (0, 0) when the budget excludes every candidate.
         """
         eng = self.engine
         rows_by_bucket: dict[int, list[tuple[int, int, int, bool]]] = {}
-        for slot, start in sorted(self._prefill_start.items()):
+        tokens_spent = 0
+        for slot, start in self._prefill_start.items():  # insertion = claim order
             req = self.slots[slot]
             real, bucket, final = self._next_chunk(req, start)
+            if token_budget and tokens_spent + real > token_budget:
+                if not (allow_overshoot and tokens_spent == 0):
+                    break
+            tokens_spent += real
             rows_by_bucket.setdefault(bucket, []).append(
                 (slot, start, real, final)
             )
@@ -528,7 +600,7 @@ class ContinuousScheduler:
                 else:
                     self.active[slot] = True
                     self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
-        return n_live
+        return n_live, tokens_spent
 
     def _admit_per_request(self) -> int:
         """Fill every free slot from the queue (prefill-into-slot).  All
@@ -600,12 +672,23 @@ class ContinuousScheduler:
 
     def run_segment(self) -> int:
         """admit → one compiled segment → stream + retire.  Returns the
-        number of requests still running afterwards."""
+        number of requests still running afterwards.
+
+        With speculative decoding each segment step is a draft-and-verify
+        round: the program returns an (n_slots, S, k+1) emission block
+        (1..k+1 real tokens per live slot per step, −1 padding after the
+        accepted prefix) which flattens row-major into the same chronological
+        per-slot stream the plain path produces — retirement, eos pinning,
+        budget caps, and streaming all run off that stream unchanged.
+        """
         self._admit()
         if not self.active.any():
             return 0
         eng = self.engine
-        base = (self.segment_len, eng.params, self.cache,
+        seg_key = "slot_spec_segment" if self.spec is not None else "slot_segment"
+        params_args = ((eng.params, eng.draft_params)
+                       if self.spec is not None else (eng.params,))
+        base = (self.segment_len, *params_args, self.cache,
                 self.tok, self.pos, self.done, self.key,
                 jnp.asarray(self.active), jnp.asarray(self.limit))
         if self.segment_mode == "while":
@@ -615,29 +698,40 @@ class ContinuousScheduler:
             # segments, so riding out a long segment delays its TTFT)
             pending = bool(self.queue) or bool(self._prefill_start)
             args = (*base, jnp.bool_(pending))
-            if self.paged:
-                seg_fn, seg_key = (eng._slot_segment_while_paged,
-                                   "slot_segment_while_paged")
-                args = (*args, jnp.asarray(self.block_table))
-            else:
-                seg_fn, seg_key = eng._slot_segment_while, "slot_segment_while"
+            seg_key += "_while"
         else:
             args = base
-            if self.paged:
-                seg_fn, seg_key = eng._slot_segment_paged, "slot_segment_paged"
-                args = (*args, jnp.asarray(self.block_table))
-            else:
-                seg_fn, seg_key = eng._slot_segment, "slot_segment"
+        if self.paged:
+            args = (*args, jnp.asarray(self.block_table))
+            seg_key += "_paged"
+        seg_fn = getattr(eng, "_" + seg_key)
         toks, self.cache, self.tok, self.pos, self.done, self.key = (
             seg_fn(*args)
         )
         eng.call_counts[seg_key] += 1
         toks = np.asarray(toks)  # the only per-segment download
         self.stats["segments"] += 1
-        # steps actually executed: every executed step has ≥1 live emission
-        # (while-mode exits instead of running fully-masked steps)
-        n_exec = (int((toks >= 0).any(axis=0).sum())
-                  if self.segment_mode == "while" else self.segment_len)
+        if self.spec is not None:
+            # (n_slots, S, k+1): per-step emission counts feed the
+            # accepted-length stats, then the block flattens row-major into
+            # the chronological per-slot stream the host loop below consumes
+            per_step = (toks >= 0).sum(axis=2)  # (n_slots, S)
+            live_step = per_step > 0
+            n_exec = (int(live_step.any(axis=0).sum())
+                      if self.segment_mode == "while" else self.segment_len)
+            self.stats["spec_steps"] += int(live_step.sum())
+            self.stats["spec_emitted"] += int(per_step[live_step].sum())
+            hist = self.stats["accepted_hist"]
+            for n, c in zip(*np.unique(per_step[live_step], return_counts=True)):
+                hist[int(n)] = hist.get(int(n), 0) + int(c)
+            live_counts = live_step.sum(axis=1)  # live steps per slot
+            toks = toks.reshape(toks.shape[0], -1)
+        else:
+            # every executed step has ≥1 live emission (while-mode exits
+            # instead of running fully-masked steps)
+            n_exec = (int((toks >= 0).any(axis=0).sum())
+                      if self.segment_mode == "while" else self.segment_len)
+            live_counts = (toks >= 0).sum(axis=1)
         self.stats["steps_total"] += n_exec
         eos = eng.sc.eos_token
         now = self.clock()
@@ -646,7 +740,7 @@ class ContinuousScheduler:
                 self.stats["slot_steps_masked"] += n_exec
                 continue
             emitted = toks[slot]
-            n_live = int((emitted >= 0).sum())
+            n_live = int(live_counts[slot])
             self.stats["slot_steps_live"] += n_live
             self.stats["slot_steps_masked"] += n_exec - n_live
             saw_eos = False

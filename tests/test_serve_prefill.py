@@ -304,3 +304,47 @@ def test_scheduler_validates_chunk_geometry(engines):
                       ServeConfig(max_len=50))
     with pytest.raises(AssertionError):  # chunk must divide max_len
         ContinuousScheduler(eng, prefill_chunk=16)
+
+
+# --------------------------------------- Sarathi-style token-budget rounds
+
+
+def test_token_budget_bounds_prefill_per_round(engines):
+    """``prefill_token_budget=N`` caps the real prefill tokens an admit
+    round advances (Sarathi-style): with 3 slots × 16-token chunks and a
+    budget of 16, each round advances ~one chunk instead of one chunk per
+    slot — while outputs stay bit-identical to the unbudgeted scheduler."""
+    lens = [40, 40, 40]
+    news = [6, 6, 6]
+    prompts = [_prompt(200 + i, n) for i, n in enumerate(lens)]
+
+    def run(**kw):
+        sched = _sched(engines, "dense", segment_mode="scan", **kw)
+        handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+        _drain(sched)
+        return [h.tokens for h in handles], sched
+
+    base, sched0 = run()
+    got, sched = run(prefill_token_budget=CHUNK)
+    assert got == base
+    per_round = sched.stats["prefill_tokens_per_round"]
+    assert per_round, "no budgeted rounds recorded"
+    # every round stops at the budget (the final chunks may undershoot)
+    assert max(per_round) <= CHUNK
+    # the unbudgeted scheduler front-loads more prefill per round
+    assert max(sched0.stats["prefill_tokens_per_round"]) > CHUNK
+    # budget below the chunk length still makes progress (first row always
+    # advances), it just serializes the chunks
+    got2, sched2 = run(prefill_token_budget=CHUNK // 2)
+    assert got2 == base
+    assert max(sched2.stats["prefill_tokens_per_round"]) <= CHUNK
+
+
+def test_token_budget_ignored_without_chunked_admission(engines):
+    """The knob is an interleave policy of chunked admission; on the
+    per-request path (or after a skip-reason fallback) it is inert."""
+    sched = _sched(engines, "dense", chunked=False, prefill_token_budget=64)
+    assert sched.prefill_token_budget == 0
+    h = sched.submit(_prompt(220, 5), 3)
+    _drain(sched)
+    assert h.done and len(h.tokens) == 3

@@ -3,11 +3,15 @@
 Each case draws arrival order, prompt lengths, token budgets, scheduler
 geometry, and segment mode from a seeded RNG, runs the workload through the
 continuous scheduler under BOTH cache layouts × BOTH admission paths
-(per-request and batched/chunked prefill), and oracles every request
-against a sequential batch-1 ``ServeEngine.generate`` run.  The paged cases
-additionally run ``check_block_invariants`` after every segment (no block
-mapped to two live slots, free ∪ mapped = pool, table rows mirror the
-allocator).
+(per-request and batched/chunked prefill) × speculative decoding
+(k ∈ {2, 4}; a weak truncated drafter at k=2 so rejection/rollback churns,
+an exact self-drafter at k=4 so full windows land), and oracles every
+request against a sequential batch-1 ``ServeEngine.generate`` run.  The
+paged cases additionally run ``check_block_invariants`` after every segment
+(no block mapped to two live slots, free ∪ mapped = pool, table rows mirror
+the allocator); speculative cases additionally check the rollback
+invariant after every segment (each live slot's device cursor equals
+prompt_len + emitted − 1 — rejected draft tails never advance it).
 
 The draw pools are deliberately small (few distinct prompt/budget lengths)
 so the per-length compiled programs stay bounded on the CPU smoke box.
@@ -18,13 +22,18 @@ import numpy as np
 import pytest
 
 from repro.models.registry import get_arch
-from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine
+from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine, SpecConfig
 from repro.sharding.mesh import MeshPlan
 
 PLAN = MeshPlan()
 MAX_LEN, BLOCK_LEN = 64, 8
 PROMPT_LENS = (3, 5, 8, 13)
 NEW_TOKENS = (1, 2, 5, 9, 16)
+SPEC_CONFIGS = {
+    None: None,
+    "spec_k2": SpecConfig(k=2, draft="truncate:1"),
+    "spec_k4": SpecConfig(k=4, draft="self", draft_sparsity=0.0),
+}
 
 
 @pytest.fixture(scope="module")
@@ -39,13 +48,17 @@ def engines(arch_params):
     """Module-scoped engines so compiled programs are shared across cases."""
     arch, params = arch_params
 
-    def mk(layout):
+    def mk(layout, spec=None):
         sc = ServeConfig(max_len=MAX_LEN, kv_layout=layout,
-                         block_len=BLOCK_LEN)
+                         block_len=BLOCK_LEN, spec=spec)
         return ServeEngine(arch, params, PLAN, sc)
 
-    return {"dense": mk("dense"), "paged": mk("paged"),
-            "oracle": mk("dense")}
+    out = {"dense": mk("dense"), "paged": mk("paged"), "oracle": mk("dense")}
+    for name, spec in SPEC_CONFIGS.items():
+        if spec is not None:
+            for layout in ("dense", "paged"):
+                out[f"{layout}:{name}"] = mk(layout, spec)
+    return out
 
 
 def _draw_workload(rng, n_requests):
@@ -64,21 +77,38 @@ def _oracle(engines, prompts, news):
     ]
 
 
-def _run_sched(engines, layout, prompts, news, rng, chunked=False):
+def _check_rollback_invariant(sched):
+    """Each live slot's device cursor must equal prompt_len + emitted − 1:
+    accepted tokens advance it one-for-one, rejected draft tails never do
+    (rollback = cursor truncation)."""
+    if sched.spec is None:
+        return
+    pos = np.asarray(sched.pos)
+    for slot, req in enumerate(sched.slots):
+        if req is None or not sched.active[slot]:
+            continue  # empty, or still mid-chunked-prefill
+        want = req.prompt_len + len(req.tokens) - 1
+        assert pos[slot] == want, (slot, int(pos[slot]), want)
+
+
+def _run_sched(engines, layout, prompts, news, rng, chunked=False, spec=None):
     n_slots = int(rng.randint(2, 4))
     segment_len = int(rng.randint(2, 8))
     mode = ("scan", "while")[int(rng.randint(2))]
+    spec_k = SPEC_CONFIGS[spec].k if spec else 0
     kw = {}
     if layout == "paged":
         # pool between "one big request" and dense-equivalent capacity
+        # (speculative windows map spec_k extra overshoot positions)
         dense_eq = n_slots * (MAX_LEN // BLOCK_LEN)
-        need_max = max(-(-(len(p) + n) // BLOCK_LEN)
+        need_max = max(-(-(len(p) + n + spec_k) // BLOCK_LEN)
                        for p, n in zip(prompts, news))
         kw["n_blocks"] = int(rng.randint(need_max, dense_eq + 1))
     if chunked:  # batched/bucketed admission (PR 4); chunk 8 ⇒ buckets (4, 8)
         kw["prefill_chunk"] = 8
         kw["prefill_buckets"] = 2
-    sched = ContinuousScheduler(engines[layout], n_slots=n_slots,
+    key = layout if spec is None else f"{layout}:{spec}"
+    sched = ContinuousScheduler(engines[key], n_slots=n_slots,
                                 segment_len=segment_len, segment_mode=mode,
                                 **kw)
     # arrival order interleaves with service: submit in random bursts
@@ -94,6 +124,7 @@ def _run_sched(engines, layout, prompts, news, rng, chunked=False):
         if sched.has_work():
             sched.run_segment()
             sched.check_block_invariants()
+            _check_rollback_invariant(sched)
         if i >= len(order) and not sched.has_work():
             return handles, sched
     raise RuntimeError("stress scheduler did not drain")
@@ -121,6 +152,36 @@ def test_random_workload_matches_sequential_oracle(engines, seed):
             if layout == "paged":
                 assert sched.allocator.n_free == sched.allocator.capacity
                 assert st["blocks_in_use_peak"] <= sched.n_blocks
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("spec", ["spec_k2", "spec_k4"])
+def test_random_workload_speculative_matches_oracle(engines, seed, spec):
+    """The speculative schedulers replay the exact stress matrix: same
+    seeded workloads, both layouts, oracled bit-for-bit — with the rollback
+    and block invariants checked after every segment inside ``_run_sched``."""
+    rng = np.random.RandomState(seed)
+    prompts, news = _draw_workload(rng, n_requests=int(rng.randint(6, 12)))
+    want = _oracle(engines, prompts, news)
+    k = SPEC_CONFIGS[spec].k
+    for layout in ("dense", "paged"):
+        srng = np.random.RandomState(seed + 100)
+        # chunked admission rides along on a coin flip, so speculative
+        # segments also stress-interleave with mid-prefill slots (the
+        # deterministic paged×chunked×spec cover lives in test_serve_spec)
+        handles, sched = _run_sched(
+            engines, layout, prompts, news, srng,
+            chunked=bool(srng.randint(2)), spec=spec,
+        )
+        for h, w, n in zip(handles, want, news):
+            assert h.done and len(h.tokens) == n
+            assert h.tokens == w, (layout, spec, h.rid, h.tokens, w)
+        st = sched.stats
+        assert st["admitted"] == st["retired"] == len(prompts)
+        assert st["spec_steps"] > 0
+        assert all(1 <= n_ <= k + 1 for n_ in st["accepted_hist"])
+        if layout == "paged":
+            assert sched.allocator.n_free == sched.allocator.capacity
 
 
 def test_paged_pool_serves_more_context_than_it_holds(engines):
