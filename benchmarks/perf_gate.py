@@ -5,7 +5,8 @@ Usage (what .github/workflows/ci.yml runs):
 
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
     BENCH_REPEATS=1 python benchmarks/run.py \
-        --only serve_decode,serve_continuous,serve_paged,serve_prefill,serve_spec
+        --only serve_decode,serve_continuous,serve_paged,serve_prefill,\
+serve_spec,serve_robust
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
@@ -59,6 +60,10 @@ RATIO_METRICS = {
     # speculative decode also has a hard 1.2x floor below; the ratio entry
     # tracks the trajectory against the committed baseline
     "serve_spec.tok_s_ratio": 1.2,
+    # overcommitted serving must keep goodput near the uncontended baseline
+    # on a pool cut to ~60% of peak usage (ISSUE 6 acceptance criterion);
+    # lands through the warn-and-skip-on-new-section path
+    "serve_robust.goodput_ratio": 0.8,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
@@ -71,6 +76,8 @@ ABS_METRICS = [
     "serve_prefill.per_request.tok_s",
     "serve_spec.spec.tok_s",
     "serve_spec.plain.tok_s",
+    "serve_robust.contended.goodput_tok_s",
+    "serve_robust.uncontended.goodput_tok_s",
 ]
 SPEEDUP_FLOOR_METRIC = "serve_continuous.speedup_tok_s"
 # hard floor, no tolerance: batched admission must cut cold TTFT p50 by
@@ -93,6 +100,10 @@ SPEC_SPEEDUP_METRIC, SPEC_SPEEDUP_FLOOR = "serve_spec.tok_s_ratio", 1.2
 SPEC_ACCEPT_METRIC, SPEC_ACCEPT_FLOOR = "serve_spec.mean_accepted_len", 1.5
 SPEC_TRACE_METRIC = "serve_spec.spec.spec_traces"
 SPEC_TRACE_BOUND_METRIC = "serve_spec.spec_trace_bound"
+# deterministic, same-process: the contended overload run must actually
+# exercise the preemption path (the bench asserts this before recording,
+# the gate keeps it honest against stale baselines)
+PREEMPT_METRIC, PREEMPT_FLOOR = "serve_robust.contended.preemptions", 1
 
 
 def _lookup(data: dict, path: str):
@@ -245,6 +256,17 @@ def main() -> int:
         )
     else:
         print(f"mean accepted length: {acc:.2f} >= {SPEC_ACCEPT_FLOOR}")
+
+    pre = _lookup(new, PREEMPT_METRIC)
+    if pre is None:
+        failures.append(f"{PREEMPT_METRIC}: missing from new run")
+    elif pre < PREEMPT_FLOOR:
+        failures.append(
+            f"{PREEMPT_METRIC}: {pre} — the contended overload run never "
+            "preempted"
+        )
+    else:
+        print(f"contended preemptions: {pre} >= {PREEMPT_FLOOR}")
 
     spec_traces = _lookup(new, SPEC_TRACE_METRIC)
     spec_bound = _lookup(new, SPEC_TRACE_BOUND_METRIC)

@@ -8,12 +8,13 @@ env-overridable), each fenced with ``jax.block_until_ready``.  Repeat calls
 run with stdout suppressed so tables print once.
 
 ``serve_decode``, ``serve_continuous``, ``serve_paged``,
-``serve_prefill``, and ``serve_spec`` additionally record into
-machine-readable ``BENCH_serve.json`` (each under its own section —
+``serve_prefill``, ``serve_spec``, and ``serve_robust`` additionally record
+into machine-readable ``BENCH_serve.json`` (each under its own section —
 compiled-vs-python decode tok/s per batch size, continuous-vs-static
 aggregate tok/s + p50/p95 request latency, paged-vs-dense KV tok/s + peak
 cache bytes, batched/chunked-vs-per-request admission TTFT + prefill trace
-counts, and speculative-vs-plain decode tok/s + mean accepted length) so
+counts, speculative-vs-plain decode tok/s + mean accepted length, and
+overcommitted-vs-uncontended goodput under preemption) so
 the serving-perf trajectory
 is tracked across PRs; CI's perf gate (``benchmarks/perf_gate.py``) compares
 a fresh run against the committed copy.  Select a subset with
@@ -862,6 +863,107 @@ def serve_spec():
     return out
 
 
+# ------------------------------------------------------------ serve robust
+
+
+def serve_robust():
+    """Overcommitted serving under memory pressure: the heavy-tailed paged
+    workload on a pool cut to ~60% of its uncontended peak usage with an
+    overcommitted admission gate, so mid-flight preemption + on-demand
+    block growth must carry the load.  Records GOODPUT (useful tok/s) for both pools and
+    their ratio under "serve_robust" in BENCH_serve.json; greedy outputs
+    are asserted bit-identical between the contended and uncontended runs
+    before timing, and the contended run must actually preempt.
+    """
+    from repro.models.registry import get_arch
+    from repro.serve import ContinuousScheduler, ServeConfig, ServeEngine
+    from repro.sharding.mesh import MeshPlan
+
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    plan = MeshPlan()
+    # the serve_paged workload on 6 slots: the uncontended pool covers the
+    # sum of every request's full budget (49 blocks — admission never
+    # gates), whose measured peak usage is 34 blocks; the contended pool is
+    # ~60% of that peak, so overcommit + preemption must carry the load
+    n_slots, seg_len, max_len, block_len = 6, 16, 192, 16
+    # overcommit 2.0: the four long requests commit 36 blocks of budget —
+    # a tighter factor makes the commitment gate serialize them (deferrals)
+    # even though on-demand growth could run them all concurrently
+    pools = {"uncontended": 49, "contended": 20}
+    overcommit = 2.0
+    lens = [4, 16, 8, 12, 4, 16, 6, 10, 14, 8, 4, 12]
+    news = [144, 8, 16, 4, 120, 12, 4, 144, 8, 4, 16, 108]
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, arch.cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    useful = sum(news)
+    engine = ServeEngine(arch, params, plan,
+                         ServeConfig(max_len=max_len, temperature=0.0,
+                                     kv_layout="paged",
+                                     block_len=block_len))
+
+    def run(pool):
+        t0 = time.perf_counter()
+        sched = ContinuousScheduler(
+            engine, n_slots=n_slots, segment_len=seg_len,
+            segment_mode="while", n_blocks=pools[pool],
+            overcommit=overcommit if pool == "contended" else 1.0,
+        )
+        handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+        sched.run()
+        total = time.perf_counter() - t0
+        return total, [h.tokens for h in handles], sched.stats
+
+    # warmup (compiles every slot program) + output-equivalence assertion
+    _, base_toks, _ = run("uncontended")
+    _, cont_toks, cont_stats = run("contended")
+    assert base_toks == cont_toks, "contended outputs diverged"
+    assert cont_stats["preemptions"] >= 1, "contended pool never preempted"
+    reps = max(BENCH_REPEATS, 3)
+    runs = {"uncontended": [], "contended": []}
+    for _ in range(reps):
+        for pool in ("uncontended", "contended"):
+            runs[pool].append(run(pool))
+    out = {
+        "arch": "tinyllama-1.1b (reduced)",
+        "workload": {"n_requests": len(prompts), "prompt_lens": lens,
+                     "new_tokens": news, "n_slots": n_slots,
+                     "segment_len": seg_len, "segment_mode": "while",
+                     "block_len": block_len, "n_blocks": pools,
+                     "overcommit": overcommit},
+    }
+    for pool in ("uncontended", "contended"):
+        t, _, stats = min(runs[pool], key=lambda r: r[0])
+        out[pool] = {"goodput_tok_s": useful / t,
+                     "preemptions": stats["preemptions"],
+                     "readmits": stats["readmits"],
+                     "replayed_tokens": stats["replayed_tokens"],
+                     "blocks_grown": stats["blocks_grown"],
+                     "blocks_in_use_peak": stats["blocks_in_use_peak"],
+                     "admit_deferred": stats["admit_deferred"]}
+        if stats["readmit_penalty_n"]:
+            out[pool]["readmit_penalty_mean_s"] = (
+                stats["readmit_penalty_s"] / stats["readmit_penalty_n"])
+    out["goodput_ratio"] = (out["contended"]["goodput_tok_s"]
+                            / out["uncontended"]["goodput_tok_s"])
+    print("\n== serve_robust: overcommitted pool vs uncontended ==")
+    print(f"{'pool':>12s} {'tok/s':>9s} {'preempt':>8s} {'grown':>6s}")
+    for pool in ("uncontended", "contended"):
+        r = out[pool]
+        print(f"{pool:>12s} {r['goodput_tok_s']:9.1f} "
+              f"{r['preemptions']:8d} {r['blocks_grown']:6d}")
+    c = out["contended"]
+    print(f"goodput ratio {out['goodput_ratio']:.2f}x on a "
+          f"{pools['contended']}/{pools['uncontended']}-block pool "
+          f"({c['preemptions']} preemptions, {c['readmits']} readmits, "
+          f"{c['replayed_tokens']} replayed tokens, "
+          f"mean readmit penalty "
+          f"{c.get('readmit_penalty_mean_s', 0.0) * 1e3:.1f} ms)")
+    _merge_bench_json("serve_robust", out)
+    return out
+
+
 # ---------------------------------------------------------------- roofline
 
 
@@ -912,10 +1014,12 @@ def main() -> None:
          lambda o: f"ttft_p50={o['ttft_p50_ratio']:.2f}x"),
         ("serve_spec", serve_spec,
          lambda o: f"spec_speedup={o['tok_s_ratio']:.2f}x"),
+        ("serve_robust", serve_robust,
+         lambda o: f"goodput_ratio={o['goodput_ratio']:.2f}x"),
         ("roofline_table", roofline_table, lambda o: f"cells={o.get('cells', 0)}"),
     ]
     self_timed = {"serve_decode", "serve_continuous", "serve_paged",
-                  "serve_prefill", "serve_spec"}
+                  "serve_prefill", "serve_spec", "serve_robust"}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench names (default: all)")

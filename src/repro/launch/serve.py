@@ -19,6 +19,10 @@ Usage (CPU smoke):
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --workload poisson --n-requests 16 --rate 50 \
         --spec-k 4 --spec-draft self --spec-sparsity 0.5
+    # overcommitted paged pool with preemption, deadlines, fault injection:
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --workload poisson --kv-layout paged --n-blocks 20 \
+        --overcommit 2.0 --deadline 30 --chaos-slot-fail-prob 0.1
 """
 from __future__ import annotations
 
@@ -72,13 +76,25 @@ def _run_poisson(eng: ServeEngine, args) -> None:
     def stream0(req, tok):  # live token stream for the first request
         print(f"  [r0 stream] +{tok}", flush=True)
 
+    chaos = None
+    if (args.chaos_exhaust_prob or args.chaos_cancel_prob
+            or args.chaos_slot_fail_prob):
+        from repro.serve import ChaosConfig
+
+        chaos = ChaosConfig(seed=args.chaos_seed,
+                            exhaust_prob=args.chaos_exhaust_prob,
+                            cancel_prob=args.chaos_cancel_prob,
+                            slot_fail_prob=args.chaos_slot_fail_prob)
     sched = ContinuousScheduler(eng, n_slots=args.slots,
                                 segment_len=args.segment_len,
                                 segment_mode=args.segment_mode,
                                 n_blocks=args.n_blocks,
                                 prefill_chunk=args.prefill_chunk,
                                 prefill_buckets=args.prefill_buckets,
-                                prefill_token_budget=args.prefill_token_budget)
+                                prefill_token_budget=args.prefill_token_budget,
+                                overcommit=args.overcommit,
+                                preempt_mode=args.preempt_mode,
+                                chaos=chaos)
     handles = []
     t0 = time.perf_counter()
     next_arrival = 0
@@ -89,6 +105,8 @@ def _run_poisson(eng: ServeEngine, args) -> None:
             handles.append(sched.submit(SubmitRequest(
                 prompts[i], int(n_news[i]),
                 on_token=stream0 if i == 0 else None,
+                ttft_deadline_s=args.ttft_deadline,
+                deadline_s=args.deadline,
             )))
             log.info("arrive  r%-3d t=%.3fs prompt=%d max_new=%d",
                      i, now, p_lens[i], n_news[i])
@@ -110,14 +128,16 @@ def _run_poisson(eng: ServeEngine, args) -> None:
     total = time.perf_counter() - t0
 
     useful = sum(len(h.tokens) for h in handles)
-    lats = np.asarray([h.latency for h in handles])
-    ttfts = np.asarray([h.ttft for h in handles])
+    # cancelled/expired requests may never emit: percentile what finished
+    lats = np.asarray([h.latency for h in handles if h.latency is not None])
+    ttfts = np.asarray([h.ttft for h in handles if h.ttft is not None])
     st = sched.stats
     log.info("served %d requests / %d tokens in %.2fs — %.1f tok/s",
              len(handles), useful, total, useful / total)
-    log.info("latency p50=%.3fs p95=%.3fs   ttft p50=%.3fs p95=%.3fs",
-             np.percentile(lats, 50), np.percentile(lats, 95),
-             np.percentile(ttfts, 50), np.percentile(ttfts, 95))
+    if len(lats) and len(ttfts):
+        log.info("latency p50=%.3fs p95=%.3fs   ttft p50=%.3fs p95=%.3fs",
+                 np.percentile(lats, 50), np.percentile(lats, 95),
+                 np.percentile(ttfts, 50), np.percentile(ttfts, 95))
     log.info("segments=%d slot-steps live=%d masked=%d admissions/slot=%s",
              st["segments"], st["slot_steps_live"], st["slot_steps_masked"],
              st["admissions_per_slot"])
@@ -136,10 +156,27 @@ def _run_poisson(eng: ServeEngine, args) -> None:
     elif st["chunked_skip_reason"]:
         log.info("chunked prefill disabled: %s", st["chunked_skip_reason"])
     if sched.paged:
-        log.info("paged KV: peak blocks %d/%d (block_len=%d), "
+        log.info("paged KV: peak blocks %d/%d (block_len=%d, "
+                 "overcommit=%.2f), blocks grown on demand: %d, "
                  "admissions deferred on full pool: %d",
                  st["blocks_in_use_peak"], sched.n_blocks, sched.block_len,
-                 st["admit_deferred"])
+                 sched.overcommit, st["blocks_grown"], st["admit_deferred"])
+    if st["preemptions"]:
+        pen = (st["readmit_penalty_s"] / st["readmit_penalty_n"]
+               if st["readmit_penalty_n"] else 0.0)
+        log.info("preemption (%s): %d evictions, %d readmits (%d swap-outs, "
+                 "%d swap-ins, %d replayed tokens), mean readmit penalty "
+                 "%.1f ms", sched.preempt_mode, st["preemptions"],
+                 st["readmits"], st["swap_outs"], st["swap_ins"],
+                 st["replayed_tokens"], 1e3 * pen)
+    if st["cancelled"] or st["expired"]:
+        log.info("terminal: %d cancelled (%d blocks reclaimed), %d expired",
+                 st["cancelled"], st["blocks_reclaimed_cancel"],
+                 st["expired"])
+    if sched.chaos is not None and sched.chaos.enabled:
+        log.info("chaos: %d forced exhaustions, %d injected cancels, "
+                 "%d slot failures", st["chaos_exhausts"],
+                 st["chaos_cancels"], st["chaos_slot_failures"])
     if sched.spec is not None:
         hist = st["accepted_hist"]
         total_steps = sum(hist.values())
@@ -202,6 +239,34 @@ def main() -> None:
                          "many real prefill tokens per round (requires "
                          "--prefill-chunk; 0 = one chunk per prefilling "
                          "slot per round)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="paged admission: admit while committed full "
+                         "budgets fit overcommit x pool capacity (>1.0 "
+                         "enables mid-flight preemption when the pool runs "
+                         "dry)")
+    ap.add_argument("--preempt-mode", default="recompute",
+                    choices=("recompute", "swap"),
+                    help="how evicted requests readmit: re-prefill the "
+                         "prompt + replay emitted tokens (default), or host "
+                         "KV swap-out/swap-in")
+    ap.add_argument("--ttft-deadline", type=float, default=None,
+                    help="per-request first-token deadline in seconds "
+                         "(missed -> status 'expired')")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request total deadline in seconds")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="fault-injection RNG seed (with the --chaos-* "
+                         "probabilities below)")
+    ap.add_argument("--chaos-exhaust-prob", type=float, default=0.0,
+                    help="fault injection: per-segment probability of "
+                         "forcing pool exhaustion (paged only)")
+    ap.add_argument("--chaos-cancel-prob", type=float, default=0.0,
+                    help="fault injection: per-segment probability of "
+                         "cancelling a random live request")
+    ap.add_argument("--chaos-slot-fail-prob", type=float, default=0.0,
+                    help="fault injection: per-segment probability of "
+                         "failing a random occupied slot (its request "
+                         "retires to the queue and readmits)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: draft this many tokens per "
                          "step and verify them in one forward of the served "
@@ -232,6 +297,17 @@ def main() -> None:
         )
     if args.prefill_token_budget and not args.prefill_chunk:
         raise SystemExit("--prefill-token-budget requires --prefill-chunk")
+    if args.overcommit < 1.0:
+        raise SystemExit("--overcommit must be >= 1.0")
+    if args.overcommit != 1.0 and args.kv_layout != "paged":
+        raise SystemExit("--overcommit requires --kv-layout paged (dense "
+                         "slots have no block pool to overcommit)")
+    if args.preempt_mode == "swap" and args.kv_layout != "paged":
+        raise SystemExit("--preempt-mode swap requires --kv-layout paged")
+    if (args.chaos_exhaust_prob or args.chaos_cancel_prob
+            or args.chaos_slot_fail_prob) and args.workload != "poisson":
+        raise SystemExit("--chaos-* only applies to the slot scheduler: "
+                         "pass --workload poisson")
     if args.spec_k and args.workload != "poisson":
         raise SystemExit(
             "--spec-k only applies to the slot scheduler: pass "

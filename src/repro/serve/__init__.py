@@ -1,3 +1,4 @@
+from repro.serve.chaos import ChaosConfig
 from repro.serve.engine import ServeEngine, ServeConfig, SpecConfig
 from repro.serve.request import Request, SubmitRequest
 from repro.serve.sampling import sample_token, spec_accept
@@ -5,6 +6,7 @@ from repro.serve.scheduler import BlockAllocator, ContinuousScheduler
 
 __all__ = [
     "BlockAllocator",
+    "ChaosConfig",
     "ContinuousScheduler",
     "Request",
     "ServeConfig",

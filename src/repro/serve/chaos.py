@@ -1,0 +1,53 @@
+"""Deterministic fault injection for the continuous scheduler.
+
+``ChaosConfig`` drives seeded chaos hooks inside
+``ContinuousScheduler.run_segment`` — every injection draws from one
+``numpy.random.RandomState(seed)`` stream owned by the scheduler, so a
+failing stress case replays exactly from its seed:
+
+    exhaust_at / exhaust_prob   hide every currently-free block from the
+                                on-demand growth pass for one segment, so
+                                active slots that cross a block boundary
+                                must preempt a victim to proceed (the hold
+                                is dropped if no evictable victim remains —
+                                forced exhaustion never deadlocks)
+    cancel_prob                 call ``Request.cancel()`` on one random
+                                non-terminal request (queued or resident)
+    slot_fail_prob              preempt one random occupied slot — the
+                                artificial "slot-step failure": the request
+                                is retired from its slot and requeued, then
+                                readmitted via recompute (or swap)
+
+Probabilities are per-segment.  The hooks only mutate host-side policy
+(queue order, block holds, cancel flags), so every chaos schedule keeps the
+bit-identical-greedy contract for the requests that survive to completion.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault-injection knobs (all off by default)."""
+
+    seed: int = 0
+    exhaust_at: tuple[int, ...] = ()  # segment indices to force-exhaust
+    exhaust_prob: float = 0.0
+    cancel_prob: float = 0.0
+    slot_fail_prob: float = 0.0
+
+    def __post_init__(self):
+        for name in ("exhaust_prob", "cancel_prob", "slot_fail_prob"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if any(s < 0 for s in self.exhaust_at):
+            raise ValueError(f"exhaust_at indices must be >= 0: {self.exhaust_at}")
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.exhaust_at) or any(
+            getattr(self, n) > 0
+            for n in ("exhaust_prob", "cancel_prob", "slot_fail_prob")
+        )

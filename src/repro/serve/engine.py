@@ -138,6 +138,10 @@ class ServeConfig:
     # one-token-per-step decode.  Families without chunk-resume (and the
     # int8-quantized cache) fall back with ``engine.spec_skip_reason``.
     spec: SpecConfig | None = None
+    # run the scheduler's allocator/table/commitment invariant checks at
+    # the end of every segment (PR 6) — on by default in the stress suites,
+    # off in production paths (it walks host dicts, never the device)
+    debug_invariants: bool = False
 
 
 _SLOT_PROGRAMS = ("prefill_slot", "prefill_slots", "slot_segment",

@@ -4,26 +4,39 @@
 the scheduler wraps it in a live ``Request`` handle whose ``tokens`` list
 grows as segments complete (streaming: ``on_token`` fires once per generated
 token, in order, including the prefill-sampled first token).
+
+Terminal states: ``finished`` (budget reached or eos), ``cancelled``
+(``Request.cancel()`` honored by the scheduler within one segment), and
+``expired`` (a TTFT or total deadline passed).  Cancelled/expired requests
+keep whatever tokens they had streamed; their slot and KV blocks return to
+the pool at the sweep that retires them.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
 QUEUED = "queued"
 RUNNING = "running"
 FINISHED = "finished"
+CANCELLED = "cancelled"
+EXPIRED = "expired"
+
+TERMINAL_STATES = (FINISHED, CANCELLED, EXPIRED)
 
 
 @dataclasses.dataclass
 class SubmitRequest:
-    """Client-side submission: a prompt and a generation budget."""
+    """Client-side submission: a prompt, a generation budget, and optional
+    latency bounds (seconds from submit; ``None`` = unbounded)."""
 
     prompt: Sequence[int] | np.ndarray
     max_new_tokens: int
     on_token: Callable[["Request", int], None] | None = None
+    ttft_deadline_s: float | None = None  # submit → first token
+    deadline_s: float | None = None  # submit → last token
 
 
 @dataclasses.dataclass
@@ -40,6 +53,20 @@ class Request:
     submit_t: float = 0.0
     first_token_t: float | None = None
     finish_t: float | None = None
+    # latency bounds (None = unbounded); checked by the scheduler's
+    # terminal sweep at every segment boundary
+    ttft_deadline_s: float | None = None
+    deadline_s: float | None = None
+    cancel_requested: bool = False
+    # preemption accounting: times evicted mid-flight, and when the last
+    # eviction happened (cleared at the first post-readmit emission — the
+    # scheduler uses the gap as the readmit TTFT penalty)
+    preempts: int = 0
+    preempt_t: float | None = None
+    # host-side KV payload for preempt_mode="swap" (paged only): the live
+    # cache blocks device_get at eviction, re-uploaded at readmission
+    _swap: Any = None
+    _swap_nb: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -48,6 +75,19 @@ class Request:
     @property
     def done(self) -> bool:
         return self.state == FINISHED
+
+    @property
+    def terminal(self) -> bool:
+        """Finished, cancelled, or expired — no further tokens will arrive."""
+        return self.state in TERMINAL_STATES
+
+    @property
+    def cancelled(self) -> bool:
+        return self.state == CANCELLED
+
+    @property
+    def expired(self) -> bool:
+        return self.state == EXPIRED
 
     @property
     def latency(self) -> float | None:
@@ -62,6 +102,14 @@ class Request:
         if self.first_token_t is None:
             return None
         return self.first_token_t - self.submit_t
+
+    def cancel(self) -> None:
+        """Request cooperative cancellation.  The scheduler honors it at the
+        next segment boundary: the request reaches state ``cancelled``, its
+        slot and KV blocks are released, and already-streamed tokens stay on
+        the handle.  No-op once the request is terminal."""
+        if not self.terminal:
+            self.cancel_requested = True
 
     def _emit(self, token: int) -> None:
         self.tokens.append(token)

@@ -68,6 +68,29 @@ positions of max_len headroom (and ``spec.k`` extra mapped block capacity
 under the paged layout) for the rejected-tail overshoot the cursor rollback
 truncates.  Families that cannot chunk-resume (and int8-quant KV) fall back
 to plain decode with the reason in ``stats["spec_skip_reason"]``.
+
+Overcommit-safe serving (PR 6): the paged layout no longer maps a request's
+whole block budget at admission.  Admission claims only the blocks its
+prefix prefill writes; before every segment ``_ensure_segment_capacity``
+grows each active slot to cover the segment's worst-case write position
+(host-derivable from the cursor invariant pos = prompt_len + emitted − 1).
+The admission gate becomes a COMMITMENT gate: the head admits while
+Σ full-lifetime budgets of resident slots + its own ≤ ``overcommit`` ×
+pool capacity.  At ``overcommit=1.0`` growth can never fail (mapped ≤
+committed ≤ capacity), reproducing the PR 3 semantics; above 1.0 the pool
+can run dry mid-flight, and a victim policy (least progress first, ties
+evict the latest arrival; the most-progressed resident is never evicted,
+which guarantees liveness) preempts slots until the segment fits.  Victims
+requeue at the FRONT of the queue and readmit by recompute — re-prefill of
+the PROMPT alone (the original admission program, bit-exact), after which
+ordinary decode segments re-derive the already-emitted tokens while the
+host suppresses the duplicates (replay) — so the resumed stream is
+bit-identical to never having been evicted.  ``preempt_mode="swap"``
+readmits by host swap-out/swap-in of the live KV blocks instead.  ``Request.cancel()`` and per-request TTFT/total
+deadlines retire requests at the next segment boundary (slot and blocks
+released within one segment); ``ChaosConfig`` injects seeded pool
+exhaustion, cancellations, and slot failures for the fault-injection
+stress suite.
 """
 from __future__ import annotations
 
@@ -79,8 +102,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.chaos import ChaosConfig
 from repro.serve.engine import ServeEngine
-from repro.serve.request import FINISHED, RUNNING, Request, SubmitRequest
+from repro.serve.request import (CANCELLED, EXPIRED, FINISHED, QUEUED,
+                                 RUNNING, Request, SubmitRequest)
 from repro.utils.logging import get_logger
 
 log = get_logger("serve.scheduler")
@@ -94,7 +119,12 @@ class BlockAllocator:
     Blocks are interchangeable, so there is no fragmentation: ``alloc``
     succeeds iff enough blocks are free.  ``mapped`` tracks slot → blocks so
     the stress suite can assert the no-double-mapping invariant after every
-    segment (``ContinuousScheduler.check_block_invariants``).
+    segment (``ContinuousScheduler.check_block_invariants``).  ``grow``
+    appends blocks to an existing mapping — the on-demand growth path: a
+    slot acquires blocks as its cursor crosses block boundaries instead of
+    its whole budget at admission.  Misuse (alloc beyond the free list,
+    double-map, grow/release of an unmapped slot) raises rather than
+    corrupting the free list.
     """
 
     def __init__(self, n_blocks: int, first_block: int = 1):
@@ -118,16 +148,45 @@ class BlockAllocator:
         return n <= len(self.free)
 
     def alloc(self, slot: int, n: int) -> list[int]:
-        """Map ``n`` blocks to ``slot``; raises if it already holds blocks
-        or the pool is short (callers gate on ``can_alloc``)."""
-        assert slot not in self.mapped, f"slot {slot} already mapped"
-        assert self.can_alloc(n), (n, len(self.free))
+        """Map ``n`` blocks to ``slot``; raises ``ValueError`` if it already
+        holds blocks or the pool is short (callers gate on ``can_alloc``)."""
+        if slot in self.mapped:
+            raise ValueError(
+                f"slot {slot} already holds {len(self.mapped[slot])} blocks "
+                f"(grow() extends an existing mapping)"
+            )
+        if not self.can_alloc(n):
+            raise ValueError(
+                f"alloc(slot={slot}, n={n}): only {len(self.free)} of "
+                f"{self.capacity} blocks free"
+            )
         blocks = [self.free.popleft() for _ in range(n)]
         self.mapped[slot] = blocks
+        return list(blocks)  # copy: grow() extends the stored list in place
+
+    def grow(self, slot: int, n: int) -> list[int]:
+        """Append ``n`` blocks to ``slot``'s existing mapping (on-demand
+        growth); raises ``KeyError`` on an unmapped slot and ``ValueError``
+        when the free list is short."""
+        if slot not in self.mapped:
+            raise KeyError(f"grow on slot {slot} which holds no blocks")
+        if not self.can_alloc(n):
+            raise ValueError(
+                f"grow(slot={slot}, n={n}): only {len(self.free)} of "
+                f"{self.capacity} blocks free"
+            )
+        blocks = [self.free.popleft() for _ in range(n)]
+        self.mapped[slot].extend(blocks)
         return blocks
 
     def release(self, slot: int) -> list[int]:
-        """Unmap and return all of ``slot``'s blocks to the free list."""
+        """Unmap and return all of ``slot``'s blocks to the free list;
+        raises ``KeyError`` on double-release / an unmapped slot."""
+        if slot not in self.mapped:
+            raise KeyError(
+                f"release of slot {slot} which holds no blocks "
+                f"(double-release?)"
+            )
         blocks = self.mapped.pop(slot)
         self.free.extend(blocks)
         return blocks
@@ -146,8 +205,13 @@ class ContinuousScheduler:
         prefill_buckets: int = 4,
         prefill_token_budget: int = 0,
         clock: Callable[[], float] = time.perf_counter,
+        overcommit: float = 1.0,
+        preempt_mode: str = "recompute",
+        chaos: ChaosConfig | None = None,
     ):
         assert n_slots >= 1 and segment_len >= 1, (n_slots, segment_len)
+        assert overcommit >= 1.0, f"overcommit must be >= 1.0, got {overcommit}"
+        assert preempt_mode in ("recompute", "swap"), preempt_mode
         # speculative decoding: the engine resolved the drafter (or recorded
         # why the family/plan cannot run draft-and-verify and fell back);
         # the scheduler just routes segments to the spec programs and
@@ -225,6 +289,30 @@ class ContinuousScheduler:
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * n_slots
         self.paged = engine.sc.kv_layout == "paged"
+        assert preempt_mode == "recompute" or self.paged, (
+            "preempt_mode='swap' swaps KV blocks — paged layout only"
+        )
+        # overcommit admission: admit while Σ committed full budgets stays
+        # under overcommit × capacity; blocks map lazily, preemption covers
+        # the (overcommit > 1) case where growth finds the pool dry
+        self.overcommit = float(overcommit)
+        self.preempt_mode = preempt_mode
+        self._committed: dict[int, int] = {}  # slot -> full block budget
+        # slot -> prefix being prefilled (always the tenant's prompt:
+        # recompute readmits re-prefill the prompt ALONE and replay their
+        # already-emitted tokens through ordinary decode segments)
+        self._prefix: dict[int, np.ndarray] = {}
+        # slot -> deque of already-emitted tokens the device must re-derive
+        # after a recompute readmit; the host consumes (and verifies) these
+        # duplicate emissions instead of re-emitting them — see
+        # _claim_queue_head for why replay is the only bit-exact resume
+        self._replay: dict[int, collections.deque] = {}
+        # seeded fault injection (ChaosConfig): one RandomState stream so a
+        # chaos schedule replays exactly from its seed
+        self.chaos = chaos
+        self._chaos_rng = (np.random.RandomState(chaos.seed)
+                           if chaos is not None else None)
+        self._chaos_hold = 0  # free blocks hidden from growth this segment
         if self.paged:
             self.block_len = engine.sc.block_len
             self.max_blocks = engine.max_blocks_per_slot
@@ -241,6 +329,16 @@ class ContinuousScheduler:
                 self.max_blocks, axis=1,
             )
             self.cache = engine.init_paged_cache(self.n_blocks, n_slots)
+            # swap-in writer (preempt_mode="swap"): scatter a request's
+            # saved host blocks into freshly allocated physical blocks.
+            # Donated so the pool is updated in place; retraces are bounded
+            # by the distinct saved-block counts (≤ max_blocks_per_slot)
+            self._swap_write = jax.jit(
+                lambda cache, data, ids: jax.tree_util.tree_map(
+                    lambda full, part: full.at[:, ids].set(
+                        part.astype(full.dtype)), cache, data),
+                donate_argnums=(0,),
+            )
         else:
             assert n_blocks is None, "n_blocks only applies to kv_layout=paged"
             self.cache = engine.init_slot_cache(n_slots)
@@ -279,6 +377,21 @@ class ContinuousScheduler:
             "spec_steps": 0,  # draft-and-verify rounds with >= 1 live slot-step
             "spec_emitted": 0,  # tokens emitted by those slot-steps
             "accepted_hist": {},  # tokens emitted per live slot-step -> count
+            # robustness (PR 6): on-demand growth, preemption, cancellation
+            "blocks_grown": 0,  # blocks mapped by per-segment growth
+            "preemptions": 0,  # slots evicted mid-flight (pool or chaos)
+            "readmits": 0,  # preempted requests claimed again
+            "readmit_penalty_s": 0.0,  # Σ eviction → next-emission gaps
+            "readmit_penalty_n": 0,  # gaps summed above
+            "replayed_tokens": 0,  # re-derived (suppressed) after readmit
+            "swap_outs": 0,
+            "swap_ins": 0,
+            "cancelled": 0,
+            "expired": 0,
+            "blocks_reclaimed_cancel": 0,  # blocks freed by cancellations
+            "chaos_exhausts": 0,
+            "chaos_cancels": 0,
+            "chaos_slot_failures": 0,
         }
 
     # -------------------------------------------------------------- paged
@@ -293,12 +406,19 @@ class ContinuousScheduler:
         total = req.prompt_len + req.max_new_tokens + self.spec_k
         return -(-total // self.block_len)
 
-    def _release_blocks(self, slot: int) -> None:
-        """Free a slot's blocks and point its table row back at its scratch
-        block, so the retired slot's masked frozen-pos writes land in
-        scratch instead of a freed block the next tenant may be handed."""
-        self.allocator.release(slot)
+    def _blocks_through(self, pos: int) -> int:
+        """Blocks needed to cover write positions 0..``pos`` inclusive."""
+        return pos // self.block_len + 1
+
+    def _release_blocks(self, slot: int) -> list[int]:
+        """Free a slot's blocks (and its overcommit commitment) and point
+        its table row back at its scratch block, so the retired slot's
+        masked frozen-pos writes land in scratch instead of a freed block
+        the next tenant may be handed."""
+        self._committed.pop(slot, None)
+        blocks = self.allocator.release(slot)
         self.block_table[slot] = slot
+        return blocks
 
     def check_block_invariants(self) -> None:
         """Allocator/table invariants (stress suite runs this after every
@@ -327,6 +447,274 @@ class ContinuousScheduler:
                 assert (row[nb:] == slot).all(), (slot, row)
             else:
                 assert (row == slot).all(), f"unmapped slot {slot} bad row"
+        # overcommit commitments mirror the mapped slots and bound them
+        assert set(self._committed) == set(alc.mapped), (
+            f"committed slots {sorted(self._committed)} ≠ mapped slots "
+            f"{sorted(alc.mapped)}"
+        )
+        for slot, blocks in alc.mapped.items():
+            assert len(blocks) <= self._committed[slot], (
+                f"slot {slot} mapped {len(blocks)} > committed "
+                f"{self._committed[slot]}"
+            )
+        assert sum(self._committed.values()) <= (
+            self.overcommit * alc.capacity + 1e-9
+        ), (self._committed, self.overcommit, alc.capacity)
+
+    # ------------------------------------------- growth / preemption (PR 6)
+
+    def _vacate_slot(self, slot: int) -> int:
+        """Host bookkeeping to empty a slot row — occupancy, policy vectors,
+        prefill cursor/prefix, blocks, commitment.  Returns the number of
+        blocks returned to the pool.  The device row needs no reset: with
+        ``active=0`` the segment masks it (paged: its table row is back at
+        scratch), and the next tenant's prefill overwrites tok/pos/done."""
+        self.slots[slot] = None
+        self.active[slot] = False
+        self._prefill_start.pop(slot, None)
+        self._prefix.pop(slot, None)
+        self._replay.pop(slot, None)
+        if self.paged and slot in self.allocator.mapped:
+            return len(self._release_blocks(slot))
+        return 0
+
+    def _dev_tokens(self, slot: int, req: Request) -> int:
+        """Tokens the DEVICE has derived for the slot's tenant: equals
+        ``len(req.tokens)`` except mid-replay, where the device is still
+        re-deriving tokens the request emitted before its preemption."""
+        replay = self._replay.get(slot)
+        return len(req.tokens) - (len(replay) if replay else 0)
+
+    def _segment_end_pos(self, slot: int, req: Request) -> int:
+        """Worst-case cache write position for ``req`` over the next
+        segment, from the cursor invariant pos = prompt_len + derived − 1
+        (derived = emitted, except mid-replay): plain decode advances one
+        write per step up to its limit; speculative verify windows advance
+        up to k+1 per step and overshoot the final cursor by up to k
+        rejected-tail writes."""
+        pos = req.prompt_len + self._dev_tokens(slot, req) - 1
+        limit = req.prompt_len + req.max_new_tokens - 1
+        per_step = self.spec_k + 1
+        return min(pos + self.segment_len * per_step - 1,
+                   limit + self.spec_k)
+
+    def _progress_key(self, slot: int) -> tuple:
+        """Victim-policy progress order: emitted tokens first (the rollback
+        invariant's host mirror), then — among still-prefilling slots —
+        the chunk cursor.  Fully prefilled slots rank above mid-prefill
+        ones at equal token counts."""
+        req = self.slots[slot]
+        return (len(req.tokens), self._prefill_start.get(slot, 1 << 30))
+
+    def _preempt_slot(self, slot: int, reason: str = "pool") -> None:
+        """Evict a resident mid-flight: host bookkeeping is dropped, the
+        request requeues at the FRONT of the queue (it was admitted before
+        everything waiting behind it) and readmits later by recompute —
+        re-prefill of the prompt plus a replayed re-decode of its emitted
+        tokens — or, under ``preempt_mode="swap"``, by re-uploading its
+        saved KV blocks.  Swap-out is skipped mid-prefill and mid-replay
+        (the device cursor trails the host token mirror there), falling
+        back to recompute."""
+        req = self.slots[slot]
+        if (self.preempt_mode == "swap" and self.paged and req.tokens
+                and slot not in self._prefill_start
+                and slot not in self._replay):
+            self._swap_out(slot, req)
+        self._vacate_slot(slot)
+        req.state = QUEUED
+        req.preempts += 1
+        req.preempt_t = self.clock()
+        self.queue.appendleft(req)
+        self.stats["preemptions"] += 1
+        log.debug("preempted rid=%d from slot %d (%s, emitted=%d)",
+                  req.rid, slot, reason, len(req.tokens))
+
+    def _preempt_for_blocks(self) -> bool:
+        """Pick and evict one victim so growth can retry: least progress
+        first, ties evict the latest arrival (highest rid).  The MOST
+        progressed resident (ties: earliest arrival) is protected — it is
+        never evicted, always fits the pool on its own (``submit`` bounds
+        every request's budget by the capacity), and monotonically runs to
+        completion, so preemption always terminates and the scheduler
+        always makes progress.  Returns False when no evictable resident
+        remains."""
+        residents = [s for s in range(self.n_slots)
+                     if self.slots[s] is not None]
+        if len(residents) < 2:
+            return False
+        protected = max(
+            residents,
+            key=lambda s: (self._progress_key(s), -self.slots[s].rid))
+        victim = min(
+            (s for s in residents if s != protected),
+            key=lambda s: (self._progress_key(s), -self.slots[s].rid))
+        self._preempt_slot(victim)
+        return True
+
+    def _ensure_segment_capacity(self) -> None:
+        """On-demand block growth: before each segment, grow every active
+        slot's mapping to cover its worst-case write position this segment
+        (``_segment_end_pos``).  When the pool cannot cover the growth —
+        only possible at ``overcommit > 1``, or under a chaos exhaustion
+        hold — preempt victims one at a time until it can.  Growth stays
+        within each slot's committed budget, so the block table row always
+        fits."""
+        if not self.paged:
+            return
+        hold = self._chaos_hold
+        while True:
+            needs: dict[int, int] = {}
+            for slot, req in enumerate(self.slots):
+                if req is None or not self.active[slot]:
+                    continue  # empty or mid-prefill: no decode writes yet
+                need = self._blocks_through(self._segment_end_pos(slot, req))
+                have = len(self.allocator.mapped[slot])
+                if need > have:
+                    needs[slot] = need - have
+            if sum(needs.values()) <= max(0, self.allocator.n_free - hold):
+                break
+            if self._preempt_for_blocks():
+                continue
+            if hold:
+                # chaos exhaustion with no evictable victim left: drop the
+                # hold rather than deadlock (the real free list can cover
+                # the protected slot — see _preempt_for_blocks)
+                hold = 0
+                continue
+            raise RuntimeError(  # unreachable: submit bounds every budget
+                "paged pool cannot cover the protected slot's segment")
+        for slot, delta in needs.items():
+            have = len(self.allocator.mapped[slot])
+            blocks = self.allocator.grow(slot, delta)
+            self.block_table[slot, have:have + delta] = blocks
+            self.stats["blocks_grown"] += delta
+        if needs:
+            self.stats["blocks_in_use_peak"] = max(
+                self.stats["blocks_in_use_peak"], self.allocator.n_mapped)
+
+    # ------------------------------------------------------- swap (PR 6)
+
+    def _swap_out(self, slot: int, req: Request) -> None:
+        """Copy the slot's written KV blocks to host memory so readmission
+        can skip recompute.  Written positions run 0..pos−1 (pos is the
+        NEXT write position = prompt_len + emitted − 1); whole blocks are
+        saved, and unwritten positions inside the last block are dead
+        weight the masked attention never reads."""
+        pos = req.prompt_len + len(req.tokens) - 1
+        nb = self._blocks_through(pos - 1)
+        blocks = self.allocator.mapped[slot][:nb]
+        ids = jnp.asarray(blocks, jnp.int32)
+        req._swap = jax.device_get(jax.tree_util.tree_map(
+            lambda leaf: jnp.take(leaf, ids, axis=1), self.cache))
+        req._swap_nb = nb
+        self.stats["swap_outs"] += 1
+
+    def _swap_in(self, slot: int, req: Request) -> None:
+        """Restore a swapped-out request into ``slot``: upload its saved
+        blocks into the freshly allocated physical blocks
+        (``_claim_queue_head`` mapped exactly ``_swap_nb`` of them) and
+        rebuild the device cursors.  The slot goes active immediately — no
+        prefill launch and no admission emission."""
+        blocks = self.allocator.mapped[slot]
+        self.cache = self._swap_write(
+            self.cache, req._swap, jnp.asarray(blocks, jnp.int32))
+        pos = req.prompt_len + len(req.tokens) - 1
+        self.tok = self.tok.at[slot].set(np.int32(req.tokens[-1]))
+        self.pos = self.pos.at[slot].set(np.int32(pos))
+        self.done = self.done.at[slot].set(False)
+        self.active[slot] = True
+        self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
+        req._swap = None
+        req._swap_nb = 0
+        self.stats["swap_ins"] += 1
+
+    # ---------------------------------- cancellation / deadlines (PR 6)
+
+    def _terminal_state(self, req: Request, now: float) -> str | None:
+        """CANCELLED/EXPIRED if the request should retire without finishing,
+        else None.  Cancellation wins over a simultaneous expiry."""
+        if req.cancel_requested:
+            return CANCELLED
+        if req.deadline_s is not None and now - req.submit_t > req.deadline_s:
+            return EXPIRED
+        if (req.ttft_deadline_s is not None and req.first_token_t is None
+                and now - req.submit_t > req.ttft_deadline_s):
+            return EXPIRED
+        return None
+
+    def _retire_terminal(self, req: Request, state: str, now: float) -> None:
+        req.state = state
+        req.finish_t = now
+        req._swap, req._swap_nb = None, 0  # drop any host KV payload
+        self.stats["cancelled" if state == CANCELLED else "expired"] += 1
+
+    def _sweep_terminal(self) -> None:
+        """Honor cancellations and deadlines at the segment boundary: queued
+        victims retire in place; resident victims vacate their slot, whose
+        blocks return to the pool NOW — within one segment of the cancel
+        call, not at what would have been their retirement."""
+        now = self.clock()
+        if self.queue and any(
+                self._terminal_state(r, now) for r in self.queue):
+            kept: collections.deque[Request] = collections.deque()
+            for req in self.queue:
+                state = self._terminal_state(req, now)
+                if state is None:
+                    kept.append(req)
+                else:
+                    self._retire_terminal(req, state, now)
+            self.queue = kept
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            state = self._terminal_state(req, now)
+            if state is None:
+                continue
+            released = self._vacate_slot(slot)
+            if state == CANCELLED:
+                self.stats["blocks_reclaimed_cancel"] += released
+            self._retire_terminal(req, state, now)
+
+    # ------------------------------------------------------ chaos (PR 6)
+
+    def _inject_chaos(self) -> None:
+        """Seeded fault injection (see serve/chaos.py): runs before the
+        terminal sweep so injected cancellations retire within the same
+        segment.  Draws come from one RandomState stream, so a chaos
+        schedule replays exactly from ``ChaosConfig.seed``."""
+        self._chaos_hold = 0
+        c = self.chaos
+        if c is None:
+            return
+        rng = self._chaos_rng
+        exhaust = self.stats["segments"] in c.exhaust_at
+        if c.exhaust_prob > 0:
+            exhaust |= bool(rng.random_sample() < c.exhaust_prob)
+        if exhaust and self.paged:
+            self._chaos_hold = self.allocator.n_free
+            self.stats["chaos_exhausts"] += 1
+        if c.slot_fail_prob > 0 and rng.random_sample() < c.slot_fail_prob:
+            occupied = [s for s in range(self.n_slots)
+                        if self.slots[s] is not None]
+            if occupied:
+                self._preempt_slot(
+                    occupied[int(rng.randint(len(occupied)))], "chaos")
+                self.stats["chaos_slot_failures"] += 1
+        if c.cancel_prob > 0 and rng.random_sample() < c.cancel_prob:
+            cands = [r for r in list(self.queue) + self.slots
+                     if r is not None and not r.terminal
+                     and not r.cancel_requested]
+            if cands:
+                cands[int(rng.randint(len(cands)))].cancel()
+                self.stats["chaos_cancels"] += 1
+
+    def _note_emission_after_readmit(self, req: Request, now: float) -> None:
+        """First emission after a readmission closes the preemption gap —
+        the readmit TTFT penalty surfaced in ``stats``."""
+        if req.preempt_t is not None:
+            self.stats["readmit_penalty_s"] += now - req.preempt_t
+            self.stats["readmit_penalty_n"] += 1
+            req.preempt_t = None
 
     # ------------------------------------------------------------- submit
 
@@ -335,35 +723,59 @@ class ContinuousScheduler:
         prompt: Sequence[int] | np.ndarray | SubmitRequest,
         max_new_tokens: int | None = None,
         on_token=None,
+        ttft_deadline_s: float | None = None,
+        deadline_s: float | None = None,
     ) -> Request:
         """Queue one request; returns its live handle (tokens stream into
-        ``handle.tokens`` as segments complete)."""
+        ``handle.tokens`` as segments complete).  Invalid submissions raise
+        ``ValueError`` here instead of surfacing opaque shape/device errors
+        mid-run."""
         if isinstance(prompt, SubmitRequest):
             sub = prompt
         else:
-            sub = SubmitRequest(prompt, max_new_tokens, on_token)
+            sub = SubmitRequest(prompt, max_new_tokens, on_token,
+                                ttft_deadline_s, deadline_s)
         p = np.asarray(sub.prompt, np.int32).reshape(-1)
-        assert p.size >= 1, "empty prompt"
-        assert sub.max_new_tokens >= 1, sub.max_new_tokens
+        max_len = self.engine.sc.max_len
+        if p.size < 1:
+            raise ValueError("empty prompt")
+        if sub.max_new_tokens is None or sub.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {sub.max_new_tokens}"
+            )
+        if p.size >= max_len:
+            raise ValueError(
+                f"prompt length {p.size} must be < max_len {max_len} "
+                f"(no cache positions left to generate into)"
+            )
         # speculative decoding needs spec_k positions of cache headroom: the
         # verify window writes up to spec_k rejected-tail tokens past the
         # cursor before rollback truncates them
-        assert p.size + sub.max_new_tokens + self.spec_k <= self.engine.sc.max_len, (
-            f"prompt {p.size} + max_new {sub.max_new_tokens}"
-            + (f" + spec draft window {self.spec_k}" if self.spec_k else "")
-            + f" exceeds max_len {self.engine.sc.max_len}"
-        )
+        if p.size + sub.max_new_tokens + self.spec_k > max_len:
+            raise ValueError(
+                f"prompt {p.size} + max_new {sub.max_new_tokens}"
+                + (f" + spec draft window {self.spec_k}" if self.spec_k else "")
+                + f" exceeds max_len {max_len}"
+            )
+        for name in ("ttft_deadline_s", "deadline_s"):
+            d = getattr(sub, name)
+            if d is not None and d <= 0:
+                raise ValueError(f"{name} must be positive, got {d}")
         req = Request(
             rid=self._next_rid,
             prompt=p,
             max_new_tokens=sub.max_new_tokens,
             on_token=sub.on_token,
             submit_t=self.clock(),
+            ttft_deadline_s=sub.ttft_deadline_s,
+            deadline_s=sub.deadline_s,
         )
-        if self.paged:
+        if self.paged and self._blocks_for(req) > self.allocator.capacity:
             # liveness guard: a head request the pool can never satisfy
-            # would defer admission forever once all slots drain
-            assert self._blocks_for(req) <= self.allocator.capacity, (
+            # would defer admission forever once all slots drain — and the
+            # preemption loop's termination proof needs every single
+            # request's full budget to fit the pool on its own
+            raise ValueError(
                 f"request needs {self._blocks_for(req)} blocks but the pool "
                 f"has {self.allocator.capacity}"
             )
@@ -385,30 +797,59 @@ class ContinuousScheduler:
         return n
 
     def _claim_queue_head(self, slot: int) -> Request | None:
-        """Claim the queue head for ``slot``: paged block gating (deferral
-        preserves FIFO — the caller must stop admitting for the round on
-        None with a non-empty queue), allocator/table bookkeeping, and
-        admission stats.  Shared by both admission paths so their policy
-        cannot drift.  The caller decides slot occupancy (a 1-token
-        request on the per-request path never occupies its slot)."""
+        """Claim the queue head for ``slot``: paged commitment gating
+        (deferral preserves FIFO — the caller must stop admitting for the
+        round on None with a non-empty queue), lazy allocator/table
+        bookkeeping, and admission stats.  Shared by both admission paths
+        so their policy cannot drift.  The caller decides slot occupancy
+        (a 1-token request on the per-request path never occupies its
+        slot).
+
+        Paged gating is two-part: (1) the overcommit gate — resident full
+        budgets + the head's must fit ``overcommit × capacity`` (at 1.0
+        this makes later growth infallible); (2) the blocks the head maps
+        NOW (its prompt prefill's writes, or its saved swap blocks) must
+        actually be free.
+
+        A recompute readmit re-prefills the PROMPT alone — bit-identical
+        to the original admission — and then REPLAYS its already-emitted
+        tokens through ordinary decode segments (the host consumes the
+        duplicate emissions).  Re-prefilling prompt + emitted tokens is
+        NOT bit-exact on this backend: deep-layer KV depends on attention
+        outputs, and batched prefill attention differs bitwise from
+        single-row decode, which can flip near-tie greedy argmaxes."""
         if not self.queue:
             return None
         req = self.queue[0]
+        prefix = None if req._swap is not None else req.prompt
         if self.paged:
-            nb = self._blocks_for(req)
+            full = self._blocks_for(req)
+            committed = sum(self._committed.values())
+            if committed + full > self.overcommit * self.allocator.capacity:
+                self.stats["admit_deferred"] += 1
+                return None
+            nb = (req._swap_nb if prefix is None
+                  else self._blocks_through(len(prefix) - 1))
             if not self.allocator.can_alloc(nb):
                 self.stats["admit_deferred"] += 1
                 return None
             blocks = self.allocator.alloc(slot, nb)
+            self._committed[slot] = full
             self.block_table[slot, :nb] = blocks
             self.block_table[slot, nb:] = slot
             self.stats["blocks_in_use_peak"] = max(
                 self.stats["blocks_in_use_peak"], self.allocator.n_mapped
             )
+        if prefix is not None:
+            self._prefix[slot] = prefix
+            if req.tokens:
+                self._replay[slot] = collections.deque(req.tokens)
         self.queue.popleft()
         req.state = RUNNING
         req.slot_history.append(slot)
         self.stats["admitted"] += 1
+        if len(req.slot_history) > 1:
+            self.stats["readmits"] += 1
         self.stats["admissions_per_slot"][slot] += 1
         return req
 
@@ -423,7 +864,10 @@ class ContinuousScheduler:
             if req is None:
                 break  # queue empty, or the pool deferred the head
             self.slots[slot] = req
-            self._prefill_start[slot] = 0
+            if req._swap is not None:
+                self._swap_in(slot, req)  # active immediately, no prefill
+            else:
+                self._prefill_start[slot] = 0
 
     @property
     def n_width_buckets(self) -> int:
@@ -438,11 +882,14 @@ class ContinuousScheduler:
         Distinct prompt lengths never enter the count."""
         return len(self.buckets) * self.n_width_buckets
 
-    def _next_chunk(self, req: Request, start: int) -> tuple[int, int, bool]:
-        """(real_len, bucket_len, is_final) for the chunk at ``start``:
-        full ``prefill_chunk`` chunks until the remainder fits, then the
-        remainder padded up to the smallest covering bucket."""
-        rem = req.prompt_len - start
+    def _next_chunk(self, slot: int, start: int) -> tuple[int, int, bool]:
+        """(real_len, bucket_len, is_final) for the chunk at ``start`` of
+        the slot's prefill prefix (always the tenant's prompt — recompute
+        readmits replay their emitted tokens through decode instead of
+        re-prefilling them): full ``prefill_chunk`` chunks until the
+        remainder fits, then the remainder padded up to the smallest
+        covering bucket."""
+        rem = len(self._prefix[slot]) - start
         if rem > self.prefill_chunk:
             return self.prefill_chunk, self.prefill_chunk, False
         bucket = next(b for b in self.buckets if b >= rem)
@@ -505,8 +952,7 @@ class ContinuousScheduler:
         rows_by_bucket: dict[int, list[tuple[int, int, int, bool]]] = {}
         tokens_spent = 0
         for slot, start in self._prefill_start.items():  # insertion = claim order
-            req = self.slots[slot]
-            real, bucket, final = self._next_chunk(req, start)
+            real, bucket, final = self._next_chunk(slot, start)
             if token_budget and tokens_spent + real > token_budget:
                 if not (allow_overshoot and tokens_spent == 0):
                     break
@@ -538,8 +984,7 @@ class ContinuousScheduler:
                     width * self.max_blocks, dtype=np.int32
                 ).reshape(width, self.max_blocks)
             for i, (slot, start, real, _final) in enumerate(rows):
-                req = self.slots[slot]
-                prompts[i, :real] = req.prompt[start:start + real]
+                prompts[i, :real] = self._prefix[slot][start:start + real]
                 slots_v[i] = slot
                 starts[i] = start
                 last_local[i] = real - 1
@@ -584,18 +1029,36 @@ class ContinuousScheduler:
                     self._prefill_start[slot] = start + real
                     continue
                 del self._prefill_start[slot]
-                req.first_token_t = now
+                self._prefix.pop(slot, None)
+                if req.tokens:
+                    # recompute readmit: the prefill re-ran the ORIGINAL
+                    # admission program on the prompt alone, so its sample
+                    # re-derives the request's first token bit-exactly —
+                    # consume it against the replay deque instead of
+                    # re-emitting; the remaining emitted tokens replay
+                    # through the next decode segments the same way
+                    replay = self._replay[slot]
+                    want = replay.popleft()
+                    assert int(fh[i]) == want, (req.rid, int(fh[i]), want)
+                    self.stats["replayed_tokens"] += 1
+                    if not replay:
+                        del self._replay[slot]
+                    self.active[slot] = True
+                    self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
+                    n_live += 1
+                    continue
+                if req.first_token_t is None:
+                    req.first_token_t = now
                 req._emit(int(fh[i]))
+                self._note_emission_after_readmit(req, now)
                 n_live += 1
-                if req.max_new_tokens <= 1:
-                    # prefill token is the whole budget: finished without
+                if len(req.tokens) >= req.max_new_tokens:
+                    # prefill token finished the budget: retired without
                     # ever decoding, so its blocks/row free immediately
                     # (the written KV is never read)
                     req.state = FINISHED
                     req.finish_t = now
-                    self.slots[slot] = None
-                    if self.paged:
-                        self._release_blocks(slot)
+                    self._vacate_slot(slot)
                     self.stats["retired"] += 1
                 else:
                     self.active[slot] = True
@@ -617,7 +1080,7 @@ class ContinuousScheduler:
         safe (device executes the prefills in dispatch order).
         """
         eng = self.engine
-        pending: list[tuple[Request, int, jax.Array]] = []
+        pending: list[tuple[Request, int, jax.Array, bool]] = []
         deferred = False
         for slot in range(self.n_slots):
             if deferred:
@@ -627,12 +1090,19 @@ class ContinuousScheduler:
                 if req is None:  # pool deferred the head — stop the round
                     deferred = True
                     break
+                if req._swap is not None:
+                    # swapped-out readmit: upload its saved KV blocks and
+                    # go active — no prefill and no admission emission
+                    self.slots[slot] = req
+                    self._swap_in(slot, req)
+                    continue
+                prefix = self._prefix.pop(slot)
                 self.key, sub = jax.random.split(self.key)
                 if self.paged:
                     self.cache, self.tok, self.pos, self.done, first = (
                         eng._prefill_slot_paged(
                             eng.params, self.cache, self.tok, self.pos,
-                            self.done, jnp.asarray(req.prompt)[None, :],
+                            self.done, jnp.asarray(prefix)[None, :],
                             jnp.int32(slot),
                             jnp.asarray(self.block_table[slot]), sub,
                         )
@@ -642,14 +1112,30 @@ class ContinuousScheduler:
                     self.cache, self.tok, self.pos, self.done, first = (
                         eng._prefill_slot(
                             eng.params, self.cache, self.tok, self.pos,
-                            self.done, jnp.asarray(req.prompt)[None, :],
+                            self.done, jnp.asarray(prefix)[None, :],
                             jnp.int32(slot), sub,
                         )
                     )
                     eng.call_counts["prefill_slot"] += 1
-                pending.append((req, slot, first))
-                if req.max_new_tokens <= 1:  # prefill token is the budget:
-                    if self.paged:  # never decoded → KV never read
+                resumed = bool(req.tokens)
+                pending.append((req, slot, first, resumed))
+                if resumed:
+                    # recompute readmit: the prefill re-ran the ORIGINAL
+                    # admission program on the prompt alone — its sample
+                    # re-derives the request's first token bit-exactly and
+                    # is consumed against the replay deque below; the rest
+                    # of the emitted tokens replay through the next decode
+                    # segments, suppressed host-side
+                    self.slots[slot] = req
+                    self.active[slot] = True
+                    self.limit[slot] = (req.prompt_len
+                                        + req.max_new_tokens - 1)
+                    continue
+                if req.max_new_tokens <= 1:
+                    # the prefill emission below reaches the budget: never
+                    # decoded → the written KV is never read, so blocks
+                    # free before the dispatch even completes
+                    if self.paged:
                         self._release_blocks(slot)
                     continue  # finished below; slot stays free — refill it
                 self.slots[slot] = req
@@ -657,12 +1143,23 @@ class ContinuousScheduler:
                 self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
         if not pending:
             return 0
-        firsts = jax.device_get([f for _, _, f in pending])
+        firsts = jax.device_get([f for _, _, f, _ in pending])
         now = self.clock()
-        for (req, slot, _), first in zip(pending, firsts):
-            req.first_token_t = now
+        for (req, slot, _, resumed), first in zip(pending, firsts):
+            if resumed:
+                replay = self._replay[slot]
+                want = replay.popleft()
+                assert int(first) == want, (req.rid, int(first), want)
+                self.stats["replayed_tokens"] += 1
+                if not replay:
+                    del self._replay[slot]
+                continue
+            # a fresh admission's first token never eos-pins (PR 2 contract)
+            if req.first_token_t is None:
+                req.first_token_t = now
             req._emit(int(first))
-            if req.max_new_tokens <= 1:
+            self._note_emission_after_readmit(req, now)
+            if len(req.tokens) >= req.max_new_tokens:
                 req.state = FINISHED
                 req.finish_t = now
                 self.stats["retired"] += 1
@@ -671,8 +1168,9 @@ class ContinuousScheduler:
     # ------------------------------------------------------------ segment
 
     def run_segment(self) -> int:
-        """admit → one compiled segment → stream + retire.  Returns the
-        number of requests still running afterwards.
+        """chaos → terminal sweep → admit → grow → one compiled segment →
+        stream + retire.  Returns the number of requests still running
+        afterwards.
 
         With speculative decoding each segment step is a draft-and-verify
         round: the program returns an (n_slots, S, k+1) emission block
@@ -680,9 +1178,19 @@ class ContinuousScheduler:
         accepted prefix) which flattens row-major into the same chronological
         per-slot stream the plain path produces — retirement, eos pinning,
         budget caps, and streaming all run off that stream unchanged.
+
+        With ``ServeConfig.debug_invariants`` the allocator/table/commitment
+        invariants are checked at the end of EVERY segment, so a violation
+        fails at the segment that caused it, not at retire.
         """
+        debug = self.engine.sc.debug_invariants
+        self._inject_chaos()
+        self._sweep_terminal()
         self._admit()
+        self._ensure_segment_capacity()
         if not self.active.any():
+            if debug:
+                self.check_block_invariants()
             return 0
         eng = self.engine
         seg_key = "slot_spec_segment" if self.spec is not None else "slot_segment"
@@ -743,19 +1251,37 @@ class ContinuousScheduler:
             n_live = int(live_counts[slot])
             self.stats["slot_steps_live"] += n_live
             self.stats["slot_steps_masked"] += n_exec - n_live
-            saw_eos = False
+            replay = self._replay.get(slot)
+            saw_eos = emitted_any = False
             for t in emitted:
-                if t >= 0 and len(req.tokens) < req.max_new_tokens:
+                if t < 0:
+                    continue
+                if replay is not None:
+                    # replay after a recompute readmit: the device is
+                    # re-deriving tokens the request already emitted —
+                    # consume and verify instead of re-emitting (a replayed
+                    # stream never contains eos and never reaches the
+                    # budget, so finish checks don't apply)
+                    want = replay.popleft()
+                    assert int(t) == want, (req.rid, int(t), want)
+                    self.stats["replayed_tokens"] += 1
+                    if not replay:
+                        del self._replay[slot]
+                        replay = None
+                    continue
+                if len(req.tokens) < req.max_new_tokens:
                     req._emit(int(t))
+                    emitted_any = True
                     saw_eos = saw_eos or (eos >= 0 and t == eos)
+            if emitted_any:
+                self._note_emission_after_readmit(req, now)
             if saw_eos or len(req.tokens) >= req.max_new_tokens:
                 req.state = FINISHED
                 req.finish_t = now
-                self.slots[slot] = None
-                self.active[slot] = False
-                if self.paged:
-                    self._release_blocks(slot)
+                self._vacate_slot(slot)
                 self.stats["retired"] += 1
+        if debug:
+            self.check_block_invariants()
         return sum(r is not None for r in self.slots)
 
     # ---------------------------------------------------------------- run

@@ -27,8 +27,9 @@ def test_exhaustion_gates_can_alloc():
     assert alc.can_alloc(4) and not alc.can_alloc(5)
     alc.alloc(0, 3)
     assert alc.can_alloc(1) and not alc.can_alloc(2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="only 1 of 4 blocks free"):
         alc.alloc(1, 2)  # more than free
+    assert alc.n_free == 1 and alc.n_mapped == 3  # failed alloc mutated nothing
     alc.release(0)
     assert alc.can_alloc(4)
 
@@ -36,7 +37,7 @@ def test_exhaustion_gates_can_alloc():
 def test_double_map_rejected():
     alc = BlockAllocator(4)
     alc.alloc(0, 1)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="already holds"):
         alc.alloc(0, 1)  # slot already holds blocks
 
 
@@ -44,6 +45,43 @@ def test_release_unmapped_slot_raises():
     alc = BlockAllocator(4)
     with pytest.raises(KeyError):
         alc.release(3)
+
+
+def test_double_release_raises():
+    alc = BlockAllocator(4)
+    alc.alloc(0, 2)
+    alc.release(0)
+    with pytest.raises(KeyError):
+        alc.release(0)
+    assert alc.n_free == alc.capacity  # the failed release mutated nothing
+
+
+# ------------------------------------------------------- on-demand growth
+
+
+def test_grow_extends_existing_mapping():
+    alc = BlockAllocator(6, first_block=2)
+    a = alc.alloc(0, 2)
+    b = alc.grow(0, 3)
+    assert alc.mapped[0] == a + b  # growth appends, order preserved
+    assert len(set(a + b)) == 5 and alc.n_free == 1
+    freed = alc.release(0)
+    assert sorted(freed) == sorted(a + b)
+    assert alc.n_free == alc.capacity
+
+
+def test_grow_unmapped_slot_raises():
+    alc = BlockAllocator(4)
+    with pytest.raises(KeyError):
+        alc.grow(0, 1)
+
+
+def test_grow_beyond_free_raises_without_mutating():
+    alc = BlockAllocator(4)
+    alc.alloc(0, 3)
+    with pytest.raises(ValueError, match="only 1 of 4 blocks free"):
+        alc.grow(0, 2)
+    assert len(alc.mapped[0]) == 3 and alc.n_free == 1
 
 
 def test_blocks_recycle_in_fifo_order():

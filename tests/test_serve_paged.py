@@ -133,7 +133,7 @@ def test_small_pool_defers_admission_without_deadlock(arch_params):
 
 def test_submit_rejects_request_that_can_never_fit(arch_params):
     sched = ContinuousScheduler(_engine(arch_params), n_slots=1, n_blocks=2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="blocks"):
         sched.submit(_prompt(60, 20), 10)  # needs 4 blocks, pool has 2
 
 

@@ -1,0 +1,421 @@
+"""Overcommit-safe serving (ISSUE 6 acceptance tests).
+
+Four clusters:
+
+* **Overcommit stress** — a seeded workload whose summed full block demand
+  is ≥ 1.5× the pool runs on an overcommitted paged scheduler: it must
+  complete with zero deadlock, observe ≥ 1 mid-flight preemption, and emit
+  greedy outputs bit-identical to the same workload on an uncontended pool
+  (dense and paged, plain and speculative decode, recompute and swap
+  readmission).
+* **Fault injection** — seeded ``ChaosConfig`` schedules (forced pool
+  exhaustion, injected cancellations, artificial slot failures) with the
+  allocator invariants checked after EVERY segment (``debug_invariants``)
+  and every free block poisoned between segments (the PR 5 poison-check
+  pattern): cancellations/expiries must release blocks within one segment
+  and never corrupt surviving slots.
+* **Cancellation / deadlines** — the terminal-status contract on the
+  request handle (``cancelled`` / ``expired``), block release timing, and
+  the fake-clock deadline sweep.
+* **Satellites** — ``submit`` validation ``ValueError``s, the
+  ``debug_invariants`` wiring, and shutdown-resumability of
+  ``run(max_segments=…)``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_arch
+from repro.serve import (ChaosConfig, ContinuousScheduler, ServeConfig,
+                         ServeEngine, SpecConfig)
+from repro.sharding.mesh import MeshPlan
+
+PLAN = MeshPlan()
+MAX_LEN, BLOCK_LEN = 64, 8
+POISON = 1.0e9  # large finite garbage: NaN would leak through masked softmax
+SPEC_CONFIGS = {
+    None: None,
+    "spec_k2": SpecConfig(k=2, draft="truncate:1"),
+}
+
+
+@pytest.fixture(scope="module")
+def arch_params():
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    return arch, params
+
+
+@pytest.fixture(scope="module")
+def engines(arch_params):
+    """Module-scoped engines (compiled programs shared across cases);
+    debug_invariants is ON — every segment self-checks the allocator."""
+    arch, params = arch_params
+
+    def mk(layout, spec=None, **kw):
+        sc = ServeConfig(max_len=MAX_LEN, kv_layout=layout,
+                         block_len=BLOCK_LEN, spec=spec,
+                         debug_invariants=True, **kw)
+        return ServeEngine(arch, params, PLAN, sc)
+
+    out = {"dense": mk("dense"), "paged": mk("paged"), "oracle": mk("dense")}
+    for name, spec in SPEC_CONFIGS.items():
+        if spec is not None:
+            out[f"paged:{name}"] = mk("paged", spec)
+    return out
+
+
+def _prompt(seed, length):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (length,), 0, 256),
+        np.int32,
+    )
+
+
+def _oracle(engines, prompts, news):
+    eng = engines["oracle"]
+    return [
+        list(np.asarray(eng.generate(jnp.asarray(p)[None, :], n))[0])
+        for p, n in zip(prompts, news)
+    ]
+
+
+def _drain(sched, max_iters=10_000):
+    for _ in range(max_iters):
+        if not sched.has_work():
+            return
+        sched.run_segment()
+    raise RuntimeError("scheduler did not drain — deadlock?")
+
+
+# ------------------------------------------------------- overcommit stress
+
+
+@pytest.mark.parametrize("spec", [None, "spec_k2"])
+@pytest.mark.parametrize("preempt_mode", ["recompute", "swap"])
+def test_overcommit_pool_preempts_and_stays_bit_identical(
+        engines, spec, preempt_mode):
+    """Summed block demand ≥ 1.5× the pool under overcommit=2: every
+    request completes (zero deadlock), ≥ 1 preemption fires, and outputs
+    equal the uncontended run bit-for-bit — both readmission paths, plain
+    and speculative decode."""
+    rng = np.random.RandomState(3)
+    lens = [6, 8, 5, 8, 6, 7]
+    news = [30, 24, 28, 22, 30, 26]
+    prompts = [_prompt(300 + i, n) for i, n in enumerate(lens)]
+    key = "paged" if spec is None else f"paged:{spec}"
+    spec_k = SPEC_CONFIGS[spec].k if spec else 0
+
+    def run(n_blocks, overcommit):
+        sched = ContinuousScheduler(
+            engines[key], n_slots=3, segment_len=4,
+            segment_mode=("scan", "while")[int(rng.randint(2))],
+            n_blocks=n_blocks, overcommit=overcommit,
+            preempt_mode=preempt_mode,
+        )
+        handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+        _drain(sched)
+        return handles, sched
+
+    demand = sum(-(-(len(p) + n + spec_k) // BLOCK_LEN)
+                 for p, n in zip(prompts, news))
+    pool = 9  # largest single request needs 5 blocks ≤ 9
+    assert demand >= 1.5 * pool, (demand, pool)
+
+    base, _ = run(n_blocks=demand, overcommit=1.0)  # uncontended
+    got, sched = run(n_blocks=pool, overcommit=2.0)
+    st = sched.stats
+    assert st["preemptions"] >= 1, st
+    assert st["readmits"] >= 1 and st["readmit_penalty_n"] >= 1
+    assert st["blocks_grown"] > 0  # lazy growth actually ran
+    if preempt_mode == "swap":
+        assert st["swap_outs"] >= 1 and st["swap_ins"] >= 1
+    for h, b in zip(got, base):
+        assert h.done and h.tokens == b.tokens, (h.rid, preempt_mode, spec)
+        assert len(h.tokens) == news[h.rid]
+    assert sched.allocator.n_free == sched.allocator.capacity
+
+
+def test_dense_chaos_preemption_bit_identical(engines):
+    """The dense layout has no pool, so its preemptions come from chaos
+    slot failures — recompute-on-readmit must still be bit-identical."""
+    lens = [5, 8, 6, 7, 5, 8]
+    news = [14, 9, 16, 12, 16, 9]
+    prompts = [_prompt(400 + i, n) for i, n in enumerate(lens)]
+    want = _oracle(engines, prompts, news)
+    sched = ContinuousScheduler(
+        engines["dense"], n_slots=2, segment_len=4,
+        chaos=ChaosConfig(seed=5, slot_fail_prob=0.4),
+    )
+    handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    _drain(sched)
+    assert sched.stats["preemptions"] >= 1
+    for h, w in zip(handles, want):
+        assert h.done and h.tokens == w, h.rid
+
+
+def test_overcommit_one_never_preempts(engines):
+    """overcommit=1.0 (the default) reproduces PR 3 semantics: admission
+    timing may defer, but growth can never fail, so no preemptions."""
+    prompts = [_prompt(500 + i, 8) for i in range(6)]
+    news = [16] * 6
+    sched = ContinuousScheduler(engines["paged"], n_slots=3, segment_len=4,
+                                n_blocks=6)
+    handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    _drain(sched)
+    st = sched.stats
+    assert st["preemptions"] == 0 and st["admit_deferred"] > 0
+    assert all(h.done for h in handles)
+
+
+# --------------------------------------------------------- fault injection
+
+
+def _poison_free_blocks(sched):
+    """PR 5's poison-check pattern, re-targeted at the free list: overwrite
+    every FREE block with large garbage.  If a surviving slot still reads a
+    block that cancellation/preemption released, its outputs diverge from
+    the oracle and the test fails."""
+    free = list(sched.allocator.free)
+    if not free:
+        return
+    ids = jnp.asarray(free, jnp.int32)
+    sched.cache = jax.tree_util.tree_map(
+        lambda leaf: leaf.at[:, ids].set(jnp.asarray(POISON, leaf.dtype)),
+        sched.cache,
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("chunked", [False, True])
+def test_chaos_schedule_never_corrupts_survivors(engines, seed, chunked):
+    """Seeded chaos (exhaustion + cancels + slot failures) over a paged
+    overcommitted pool, free blocks poisoned after every segment: every
+    surviving request matches the oracle exactly, cancelled/expired ones
+    hold an oracle prefix, and terminal retirement released their blocks
+    within one segment."""
+    print(f"chaos stress seed={seed} chunked={chunked}")  # -s reproducibility
+    rng = np.random.RandomState(seed)
+    n_req = 8
+    lens = [int(rng.randint(3, 14)) for _ in range(n_req)]
+    news = [int(rng.randint(2, 24)) for _ in range(n_req)]
+    prompts = [_prompt(600 + 10 * seed + i, n) for i, n in enumerate(lens)]
+    want = _oracle(engines, prompts, news)
+    kw = dict(prefill_chunk=8, prefill_buckets=2) if chunked else {}
+    sched = ContinuousScheduler(
+        engines["paged"], n_slots=3, segment_len=4, n_blocks=10,
+        overcommit=2.0,
+        chaos=ChaosConfig(seed=seed, exhaust_prob=0.15, cancel_prob=0.15,
+                          slot_fail_prob=0.15),
+        **kw,
+    )
+    handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    live_before = {}
+    for _ in range(10_000):
+        if not sched.has_work():
+            break
+        terminal_before = {h.rid for h in handles if h.terminal}
+        sched.run_segment()  # debug_invariants checks after every segment
+        # blocks release within ONE segment of a cancel/expiry: any request
+        # that turned terminal no longer holds a slot or blocks
+        for slot, req in enumerate(sched.slots):
+            assert req is None or not req.terminal
+        live_before = terminal_before
+        _poison_free_blocks(sched)
+    else:
+        raise RuntimeError("chaos scheduler did not drain")
+    del live_before
+    n_done = 0
+    for h, w in zip(handles, want):
+        assert h.terminal
+        if h.done:
+            n_done += 1
+            assert h.tokens == w, (seed, h.rid)
+        else:
+            assert h.state in ("cancelled", "expired")
+            assert h.tokens == w[:len(h.tokens)], (seed, h.rid)
+    assert sched.allocator.n_free == sched.allocator.capacity
+    st = sched.stats
+    assert st["cancelled"] == st["chaos_cancels"]
+    assert n_done == n_req - st["cancelled"]
+
+
+def test_forced_exhaustion_at_segment_forces_preemption(engines):
+    """``exhaust_at`` hides the free list from growth at exact segment
+    indices — slots that cross a block boundary there must preempt, and
+    the schedule still completes bit-identically."""
+    prompts = [_prompt(700 + i, 7) for i in range(4)]
+    news = [22] * 4
+    want = _oracle(engines, prompts, news)
+    sched = ContinuousScheduler(
+        engines["paged"], n_slots=2, segment_len=4, n_blocks=16,
+        overcommit=1.0, chaos=ChaosConfig(seed=0, exhaust_at=(1, 2, 3)),
+    )
+    handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    _drain(sched)
+    st = sched.stats
+    assert st["chaos_exhausts"] == 3
+    assert st["preemptions"] >= 1  # the hold really forced an eviction
+    for h, w in zip(handles, want):
+        assert h.done and h.tokens == w, h.rid
+
+
+# ------------------------------------------------- cancellation / deadlines
+
+
+def test_cancel_queued_request_never_runs(engines):
+    sched = ContinuousScheduler(engines["paged"], n_slots=1, segment_len=4,
+                                n_blocks=4)
+    h1 = sched.submit(_prompt(800, 8), 10)
+    h2 = sched.submit(_prompt(801, 8), 10)
+    h2.cancel()
+    _drain(sched)
+    assert h1.done and len(h1.tokens) == 10
+    assert h2.cancelled and h2.tokens == [] and not h2.slot_history
+    assert sched.stats["cancelled"] == 1
+
+
+def test_cancel_running_request_frees_blocks_within_one_segment(engines):
+    """Cancel a mid-flight request via its streaming callback: its blocks
+    return to the pool at the NEXT segment boundary and the surviving
+    request's stream is unaffected."""
+    want = _oracle(engines, [_prompt(810, 8)], [24])[0]
+
+    sched = ContinuousScheduler(engines["paged"], n_slots=2, segment_len=4,
+                                n_blocks=12)
+    mapped_at_cancel = {}
+
+    def cancel_at_5(req, tok):
+        if len(req.tokens) == 5:
+            req.cancel()
+            mapped_at_cancel["n"] = len(sched.allocator.mapped[
+                req.slot_history[-1]])
+
+    hv = sched.submit(_prompt(811, 8), 24, on_token=cancel_at_5)
+    hs = sched.submit(_prompt(810, 8), 24)
+    seen_free = False
+    while sched.has_work():
+        sched.run_segment()
+        if hv.terminal:
+            # within one segment of the sweep: victim holds nothing
+            assert hv.slot_history[-1] not in sched.allocator.mapped \
+                or sched.slots[hv.slot_history[-1]] is not hv
+            seen_free = True
+    assert seen_free and hv.cancelled and len(hv.tokens) >= 5
+    assert sched.stats["blocks_reclaimed_cancel"] >= mapped_at_cancel["n"] > 0
+    assert hs.done and hs.tokens == want
+    assert sched.allocator.n_free == sched.allocator.capacity
+
+
+def test_cancel_after_finish_is_noop(engines):
+    sched = ContinuousScheduler(engines["paged"], n_slots=1, n_blocks=4)
+    h = sched.submit(_prompt(820, 8), 4)
+    _drain(sched)
+    assert h.done
+    h.cancel()
+    assert h.done and not h.cancel_requested  # state untouched
+
+
+def test_deadlines_expire_with_fake_clock(engines):
+    """TTFT deadline on a queued request and total deadline on a running
+    one, driven by a fake clock: both reach state 'expired', blocks return
+    to the pool, and the survivor completes exactly."""
+    t = {"now": 0.0}
+    sched = ContinuousScheduler(engines["paged"], n_slots=1, segment_len=4,
+                                n_blocks=5, clock=lambda: t["now"])
+    want = _oracle(engines, [_prompt(830, 8)], [8])[0]
+    # n_slots=1: h2 queues behind h1; its TTFT deadline passes while queued
+    h1 = sched.submit(_prompt(830, 8), 8, deadline_s=100.0)
+    h2 = sched.submit(_prompt(831, 8), 8, ttft_deadline_s=0.5)
+    h3 = sched.submit(_prompt(832, 8), 30, deadline_s=5.0)
+    t["now"] = 1.0  # past h2's TTFT deadline, inside the others
+    sched.run_segment()
+    assert h2.expired and h2.tokens == []
+    while sched.has_work() and not (h1.done and len(h3.tokens) >= 1):
+        sched.run_segment()
+    assert h1.done and h1.tokens == want
+    t["now"] = 7.0  # h3 (now running) blows its total deadline mid-flight
+    while sched.has_work():
+        sched.run_segment()
+    assert h3.expired and 0 < len(h3.tokens) < 30
+    assert sched.stats["expired"] == 2
+    assert sched.allocator.n_free == sched.allocator.capacity
+
+
+def test_deadline_validation(engines):
+    sched = ContinuousScheduler(engines["paged"], n_slots=1, n_blocks=4)
+    with pytest.raises(ValueError, match="ttft_deadline_s"):
+        sched.submit(_prompt(840, 4), 4, ttft_deadline_s=0.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        sched.submit(_prompt(840, 4), 4, deadline_s=-1.0)
+
+
+# ------------------------------------------------------ submit validation
+
+
+def test_submit_validation_value_errors(engines):
+    sched = ContinuousScheduler(engines["paged"], n_slots=1, n_blocks=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(np.zeros(0, np.int32), 4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(_prompt(900, 4), 0)
+    with pytest.raises(ValueError, match="max_len"):
+        sched.submit(_prompt(901, MAX_LEN), 1)  # prompt ≥ max_len
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        sched.submit(_prompt(902, 32), 40)
+    assert not sched.queue  # nothing was enqueued
+
+
+def test_submit_spec_headroom_value_error(engines):
+    sched = ContinuousScheduler(engines["paged:spec_k2"], n_slots=1,
+                                n_blocks=8)
+    with pytest.raises(ValueError, match="draft window"):
+        sched.submit(_prompt(903, 30), MAX_LEN - 31)
+
+
+# --------------------------------------------------- debug_invariants wiring
+
+
+def test_debug_invariants_catches_corruption_at_the_segment(engines):
+    """With ServeConfig.debug_invariants, a corrupted block table fails the
+    very next run_segment — not a later retire."""
+    sched = ContinuousScheduler(engines["paged"], n_slots=2, segment_len=4,
+                                n_blocks=8)
+    assert sched.engine.sc.debug_invariants
+    sched.submit(_prompt(910, 8), 16)
+    sched.run_segment()
+    # corrupt: double-map slot 0's first block into slot 1's mapping
+    sched.allocator.mapped[1] = [sched.allocator.mapped[0][0]]
+    sched._committed[1] = 1
+    with pytest.raises(AssertionError, match="mapped to two slots|live slots"):
+        sched.run_segment()
+
+
+# ----------------------------------------------------- shutdown / resume
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_run_cap_leaves_resumable_state(engines, layout):
+    """run(max_segments=…) hitting its cap raises, but leaves the
+    queue/slots/allocator consistent: a later run() resumes and finishes
+    with bit-identical outputs."""
+    prompts = [_prompt(920 + i, 8) for i in range(5)]
+    news = [18] * 5
+    want = _oracle(engines, prompts, news)
+    kw = {"n_blocks": 8} if layout == "paged" else {}
+    sched = ContinuousScheduler(engines[layout], n_slots=2, segment_len=4,
+                                **kw)
+    handles = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    with pytest.raises(RuntimeError, match="did not drain"):
+        sched.run(max_segments=2)
+    # consistent mid-flight state: invariants hold, in-flight work intact
+    sched.check_block_invariants()
+    assert sched.has_work()
+    in_flight = sum(r is not None for r in sched.slots) + len(sched.queue)
+    assert in_flight + sum(h.done for h in handles) == len(handles)
+    sched.run()  # resumes exactly where the cap stopped it
+    for h, w in zip(handles, want):
+        assert h.done and h.tokens == w, (layout, h.rid)
+    if layout == "paged":
+        assert sched.allocator.n_free == sched.allocator.capacity

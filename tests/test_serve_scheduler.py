@@ -185,7 +185,7 @@ def test_slot_cache_contract_across_families(arch_id):
 
 def test_submit_validation(arch_params):
     sched = ContinuousScheduler(_engine(arch_params), n_slots=1)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         sched.submit(_prompt(70, 60), 10)  # exceeds max_len=64
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         sched.submit(_prompt(71, 4), 0)  # empty budget

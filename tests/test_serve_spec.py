@@ -300,7 +300,7 @@ def test_spec_window_must_fit_scratch_block(arch_params):
 def test_submit_requires_draft_window_headroom(arch_params):
     eng = _engine(arch_params, SpecConfig(k=4, draft="truncate:1"))
     sched = ContinuousScheduler(eng, n_slots=1)
-    with pytest.raises(AssertionError, match="draft window"):
+    with pytest.raises(ValueError, match="draft window"):
         sched.submit(np.arange(1, 31, dtype=np.int32), MAX_LEN - 32)
 
 

@@ -132,6 +132,7 @@ def _run_sched(engines, layout, prompts, news, rng, chunked=False, spec=None):
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_random_workload_matches_sequential_oracle(engines, seed):
+    print(f"stress seed={seed}")  # shown on failure — CI reproducibility
     rng = np.random.RandomState(seed)
     prompts, news = _draw_workload(rng, n_requests=int(rng.randint(6, 12)))
     want = _oracle(engines, prompts, news)
@@ -160,6 +161,7 @@ def test_random_workload_speculative_matches_oracle(engines, seed, spec):
     """The speculative schedulers replay the exact stress matrix: same
     seeded workloads, both layouts, oracled bit-for-bit — with the rollback
     and block invariants checked after every segment inside ``_run_sched``."""
+    print(f"stress seed={seed} spec={spec}")  # shown on failure — CI repro
     rng = np.random.RandomState(seed)
     prompts, news = _draw_workload(rng, n_requests=int(rng.randint(6, 12)))
     want = _oracle(engines, prompts, news)
