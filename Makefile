@@ -9,6 +9,7 @@ test:
 
 lint:
 	ruff check .
+	$(PY) tools/check_links.py
 
 bench-smoke:
 	BENCH_REPEATS=1 PYTHONPATH=src $(PY) benchmarks/run.py --only kernel_traffic,serve_decode,serve_continuous,serve_paged,serve_prefill
@@ -19,7 +20,7 @@ bench:
 # regenerate the serving benches and compare against the committed baseline
 perf-gate:
 	cp BENCH_serve.json /tmp/BENCH_serve_baseline.json
-	BENCH_REPEATS=2 PYTHONPATH=src $(PY) benchmarks/run.py --only serve_decode,serve_continuous,serve_paged,serve_prefill
+	BENCH_REPEATS=2 PYTHONPATH=src $(PY) benchmarks/run.py --only serve_decode,serve_continuous,serve_paged,serve_prefill,serve_energy
 	$(PY) benchmarks/perf_gate.py --baseline /tmp/BENCH_serve_baseline.json --new BENCH_serve.json
 
 ci: test bench-smoke

@@ -6,7 +6,7 @@ Usage (what .github/workflows/ci.yml runs):
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
     BENCH_REPEATS=1 python benchmarks/run.py \
         --only serve_decode,serve_continuous,serve_paged,serve_prefill,\
-serve_spec,serve_robust
+serve_spec,serve_robust,serve_energy
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
@@ -64,6 +64,10 @@ RATIO_METRICS = {
     # on a pool cut to ~60% of peak usage (ISSUE 6 acceptance criterion);
     # lands through the warn-and-skip-on-new-section path
     "serve_robust.goodput_ratio": 0.8,
+    # the analytic autotuner's pick must achieve >= 0.9x of the best
+    # measured candidate's tok/s on the sweep bench (ISSUE 7 acceptance
+    # criterion); lands through the warn-and-skip-on-new-section path
+    "serve_energy.autotune.pick_ratio": 0.9,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
@@ -78,6 +82,8 @@ ABS_METRICS = [
     "serve_spec.plain.tok_s",
     "serve_robust.contended.goodput_tok_s",
     "serve_robust.uncontended.goodput_tok_s",
+    "serve_energy.autotune.pick_tok_s",
+    "serve_energy.photonic.tok_per_s_per_w",
 ]
 SPEEDUP_FLOOR_METRIC = "serve_continuous.speedup_tok_s"
 # hard floor, no tolerance: batched admission must cut cold TTFT p50 by
@@ -104,6 +110,15 @@ SPEC_TRACE_BOUND_METRIC = "serve_spec.spec_trace_bound"
 # exercise the preemption path (the bench asserts this before recording,
 # the gate keeps it honest against stale baselines)
 PREEMPT_METRIC, PREEMPT_FLOOR = "serve_robust.contended.preemptions", 1
+# energy accounting (ISSUE 7) hard floors, analytic-model ratios from the
+# same traced run so fully deterministic: the photonic accelerator's
+# energy-per-token must stay at or below the sparse electronic baseline
+# (NullHop — the GPU datapoint NP100 is recorded but not gated, see
+# docs/energy_model.md), and the autotuner's pick must hold >= 0.9x of the
+# best measured candidate in the same-process sweep
+ENERGY_RATIO_METRIC, ENERGY_RATIO_FLOOR = (
+    "serve_energy.energy_ratio_electronic_over_photonic", 1.0)
+AUTOTUNE_METRIC, AUTOTUNE_FLOOR = "serve_energy.autotune.pick_ratio", 0.9
 
 
 def _lookup(data: dict, path: str):
@@ -267,6 +282,31 @@ def main() -> int:
         )
     else:
         print(f"contended preemptions: {pre} >= {PREEMPT_FLOOR}")
+
+    energy = _lookup(new, ENERGY_RATIO_METRIC)
+    if energy is None:
+        failures.append(f"{ENERGY_RATIO_METRIC}: missing from new run")
+    elif energy < ENERGY_RATIO_FLOOR:
+        failures.append(
+            f"{ENERGY_RATIO_METRIC}: {energy:.2f}x < floor "
+            f"{ENERGY_RATIO_FLOOR}x — photonic energy/token exceeds the "
+            "electronic baseline"
+        )
+    else:
+        print(f"energy ratio (electronic/photonic): {energy:.2f}x >= "
+              f"{ENERGY_RATIO_FLOOR}x")
+
+    pick = _lookup(new, AUTOTUNE_METRIC)
+    if pick is None:
+        failures.append(f"{AUTOTUNE_METRIC}: missing from new run")
+    elif pick < AUTOTUNE_FLOOR:
+        failures.append(
+            f"{AUTOTUNE_METRIC}: {pick:.2f}x < floor {AUTOTUNE_FLOOR}x — "
+            "the autotuner's pick fell behind the measured sweep optimum"
+        )
+    else:
+        print(f"autotune pick: {pick:.2f}x of sweep optimum >= "
+              f"{AUTOTUNE_FLOOR}x")
 
     spec_traces = _lookup(new, SPEC_TRACE_METRIC)
     spec_bound = _lookup(new, SPEC_TRACE_BOUND_METRIC)

@@ -23,6 +23,9 @@ Usage (CPU smoke):
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --workload poisson --kv-layout paged --n-blocks 20 \
         --overcommit 2.0 --deadline 30 --chaos-slot-fail-prob 0.1
+    # trace the run + energy-per-token report, with autotuned knobs:
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --workload poisson --trace --autotune
 """
 from __future__ import annotations
 
@@ -57,7 +60,10 @@ def _run_batch(eng: ServeEngine, args) -> None:
     print(jax.device_get(out)[:2])
 
 
-def _run_poisson(eng: ServeEngine, args) -> None:
+def _poisson_draws(args, vocab: int):
+    """The poisson workload's deterministic draws (seeded) — shared by the
+    run itself and the --autotune planning step, so the autotuner optimizes
+    exactly the request mix that will be served."""
     if args.rate <= 0:
         raise SystemExit("--rate must be > 0")
     if args.n_requests < 1:
@@ -70,8 +76,13 @@ def _run_poisson(eng: ServeEngine, args) -> None:
     p_lens = rng.randint(min_plen, args.prompt_len + 1, args.n_requests)
     n_news = rng.randint(max(args.new_tokens // 8, 1), args.new_tokens + 1,
                          args.n_requests)
-    prompts = [rng.randint(0, eng.cfg.vocab_size, (n,)).astype(np.int32)
-               for n in p_lens]
+    prompts = [rng.randint(0, vocab, (n,)).astype(np.int32) for n in p_lens]
+    return arrivals, p_lens, n_news, prompts
+
+
+def _run_poisson(eng: ServeEngine, args, draws=None) -> tuple[int, float]:
+    arrivals, p_lens, n_news, prompts = (
+        draws if draws is not None else _poisson_draws(args, eng.cfg.vocab_size))
 
     def stream0(req, tok):  # live token stream for the first request
         print(f"  [r0 stream] +{tok}", flush=True)
@@ -189,6 +200,30 @@ def _run_poisson(eng: ServeEngine, args) -> None:
                  sched.spec.k, sched.spec.draft, total_steps, mean_acc, bars)
     elif st["spec_skip_reason"]:
         log.info("speculative decode disabled: %s", st["spec_skip_reason"])
+    if sched.trace is not None:
+        from repro.serve.trace import trace_energy
+
+        tr = sched.trace.totals
+        log.info("trace: %d prefill + %d decode + %d spec tokens over %d "
+                 "launches — %.3g GFLOP executed, %.3g GB moved",
+                 tr["prefill_tokens"], tr["decode_tokens"], tr["spec_tokens"],
+                 len(sched.trace.events), tr["flops"] / 1e9,
+                 tr["hbm_bytes"] / 1e9)
+        rep = trace_energy(sched.trace, eng.cfg,
+                           weight_sparsity=TRACE_WEIGHT_SPARSITY,
+                           act_sparsity=TRACE_ACT_SPARSITY,
+                           platforms=("SONIC", "NullHop", "NP100"))
+        for name, r in rep["platforms"].items():
+            log.info("energy [%-7s] %.3e J/token (%.3g J over the trace), "
+                     "%.1f tok/s/W at %.2f W", name, r["j_per_token"],
+                     r["trace_energy_j"], r["tok_per_s_per_w"], r["power_w"])
+    return useful, total
+
+
+# sparsity assumptions for the --trace energy report, matching the
+# serve_energy bench (see docs/energy_model.md for what they mean)
+TRACE_WEIGHT_SPARSITY = 0.75
+TRACE_ACT_SPARSITY = 0.5
 
 
 def main() -> None:
@@ -278,6 +313,14 @@ def main() -> None:
     ap.add_argument("--spec-sparsity", type=float, default=0.75,
                     help="weight sparsity of the 'self' drafter conversion "
                          "(0.0 = exact copy, full acceptance)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-segment phase traces (host-side "
+                         "counters priced through the analytic roofline) "
+                         "and print an energy-per-token report at the end")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick segment_len/prefill_chunk/block_len/spec_k "
+                         "from the analytic autotuner before serving "
+                         "(poisson only; overrides those flags)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch, reduced=args.reduced)
@@ -316,6 +359,42 @@ def main() -> None:
     if args.spec_k and args.temperature > 0:
         raise SystemExit("speculative decoding is greedy-only: --spec-k "
                          "needs --temperature 0")
+    if args.trace and args.workload != "poisson":
+        raise SystemExit("--trace only applies to the slot scheduler: pass "
+                         "--workload poisson")
+    if args.autotune and args.workload != "poisson":
+        raise SystemExit("--autotune only applies to the slot scheduler: "
+                         "pass --workload poisson")
+    draws = None
+    predicted_tok_s = None
+    if args.autotune:
+        from repro.roofline.autotune import WorkloadSpec, autotune
+
+        draws = _poisson_draws(args, arch.cfg.vocab_size)
+        _, p_lens, n_news, _ = draws
+        w = WorkloadSpec(tuple(int(x) for x in p_lens),
+                         tuple(int(x) for x in n_news),
+                         n_slots=args.slots,
+                         max_len=args.prompt_len + args.new_tokens + 1
+                         + args.spec_k)
+        res = autotune(arch.cfg, w, paged=(args.kv_layout == "paged"),
+                       spec_ks=(0, args.spec_k) if args.spec_k else (0,))
+        log.info("autotune over %d candidates:\n%s", len(res.ranked),
+                 res.report())
+        best = res.best
+        predicted_tok_s = res.ranked[0].tok_s
+        args.segment_len = best.segment_len
+        args.prefill_chunk = best.prefill_chunk
+        args.prefill_buckets = best.prefill_buckets
+        if args.kv_layout == "paged":
+            args.block_len = best.block_len
+        if args.spec_k and best.spec_k == 0:
+            args.spec_k = 0  # the model says speculation doesn't pay here
+        log.info("autotune pick: %s (segment_len=%d prefill_chunk=%d "
+                 "prefill_buckets=%d block_len=%d spec_k=%d) — predicted "
+                 "%.1f tok/s in model units", best.label(), best.segment_len,
+                 best.prefill_chunk, best.prefill_buckets, best.block_len,
+                 best.spec_k, predicted_tok_s)
     plan = MeshPlan()
     params = arch.init_params(jax.random.PRNGKey(args.seed))
     # spec decoding writes up to spec_k rejected-tail tokens past the cursor
@@ -342,10 +421,15 @@ def main() -> None:
         kv_layout=args.kv_layout,
         block_len=args.block_len,
         spec=spec,
+        trace=args.trace,
     )
     eng = ServeEngine(arch, params, plan, sc)
     if args.workload == "poisson":
-        _run_poisson(eng, args)
+        useful, total = _run_poisson(eng, args, draws)
+        if predicted_tok_s is not None:
+            log.info("autotune: predicted %.1f tok/s (model units, ranking "
+                     "only) vs measured %.1f tok/s", predicted_tok_s,
+                     useful / total if total > 0 else 0.0)
     else:
         _run_batch(eng, args)
 

@@ -1,3 +1,37 @@
-from repro.roofline.hw import TPU_V5E
+from repro.roofline.hw import TPU_V5E, HWTarget
 from repro.roofline.analysis import analyze_compiled, roofline_terms
-from repro.roofline.analytic import analytic_cost
+from repro.roofline.analytic import (
+    StepCost,
+    analytic_cost,
+    decode_step_cost,
+    prefill_chunk_cost,
+    spec_verify_cost,
+    step_time,
+)
+from repro.roofline.autotune import (
+    AutotuneResult,
+    KnobConfig,
+    WorkloadSpec,
+    autotune,
+    default_candidates,
+    predict,
+)
+
+__all__ = [
+    "AutotuneResult",
+    "HWTarget",
+    "KnobConfig",
+    "StepCost",
+    "TPU_V5E",
+    "WorkloadSpec",
+    "analytic_cost",
+    "analyze_compiled",
+    "autotune",
+    "decode_step_cost",
+    "default_candidates",
+    "predict",
+    "prefill_chunk_cost",
+    "roofline_terms",
+    "spec_verify_cost",
+    "step_time",
+]

@@ -23,6 +23,7 @@ import dataclasses
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.roofline.hw import HWTarget
 
 
 @dataclasses.dataclass
@@ -166,3 +167,134 @@ def analytic_cost(
             "tokens": tokens,
         },
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-launch serving cost models (decode step / prefill chunk / spec verify).
+#
+# These price what the serving programs in serve/engine.py EXECUTE, not what
+# is useful: a decode segment attends the full max_len row every step and
+# runs all n_slots rows (masked ones included), a chunked-prefill launch is
+# padded to a power-of-two width.  The trace recorder (serve/trace.py) and
+# the knob autotuner (roofline/autotune.py) both price work through these,
+# so their flops/bytes columns are directly comparable.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    """Executed FLOPs + HBM bytes for one serving launch."""
+
+    flops: float
+    hbm_bytes: float
+    breakdown: dict
+
+
+def decode_step_cost(
+    cfg: ModelConfig, batch: int, s_ctx: int, cache_bytes_per_elem: float = 2.0
+) -> StepCost:
+    """One masked decode step over ``batch`` slot rows attending ``s_ctx``
+    key positions each.
+
+    Delegates to :func:`analytic_cost` (kind="decode") so the closed form
+    stays consistent across model families.  For plain attention families:
+
+      flops = 2·n_active·b  +  4·h·dh·s_ctx·b·L
+      bytes = 2·n_active  +  2·b·s_ctx·kh·dh·cb·L  +  4·b·d·2·L
+    """
+    cell = analytic_cost(
+        cfg, ShapeSpec("decode_step", int(s_ctx), int(batch), "decode"),
+        cache_bytes_per_elem,
+    )
+    return StepCost(cell.hlo_flops_est, cell.hbm_bytes, dict(cell.breakdown))
+
+
+def prefill_chunk_cost(
+    cfg: ModelConfig,
+    batch: int,
+    chunk: int,
+    start: int = 0,
+    ctx_sum: float | None = None,
+    cache_bytes_per_elem: float = 2.0,
+) -> StepCost:
+    """One (chunked-)prefill launch: ``batch`` rows × ``chunk`` tokens each,
+    resuming at cache position ``start``.
+
+    ``ctx_sum`` is the total attended context, summed over every (row,
+    token): token i of a row starting at s attends s+i+1 key positions.
+    When rows resume at different offsets (a bucketed launch) pass the
+    exact sum; the default assumes all rows start at ``start``:
+
+      ctx_sum = batch·(chunk·start + chunk·(chunk+1)/2)
+
+    Closed form (plain attention families):
+
+      flops = 2·n_active·tokens  +  4·h·dh·ctx_sum·L
+      bytes = 2·n_total (weights, read once per launch)
+              + 8·tokens·d·2·L (activations)
+              + 2·ctx_sum·kh·dh·cb·L (KV write of the chunk + gather of the
+                attended context)
+    """
+    n_active, n_total = _param_counts(cfg)
+    tokens = float(batch * chunk)
+    if ctx_sum is None:
+        ctx_sum = batch * (chunk * start + chunk * (chunk + 1) / 2.0)
+    ctx_sum = float(ctx_sum)
+    s_mean = ctx_sum / max(tokens, 1.0)
+    lin = 2.0 * n_active * tokens
+    # executed attention at the mean context = exact Σ over rows (linear)
+    _, attn_x = _attn_flops(cfg, tokens, s_mean, causal=True, decode=False)
+    moe_pad = cfg.moe_capacity_factor if cfg.n_experts else 1.0
+    flops = lin * moe_pad + attn_x
+    act = 8.0 * tokens * cfg.d_model * 2.0 * cfg.n_layers
+    if cfg.rwkv_head_size or cfg.family == "hybrid":
+        kv = 0.0  # recurrent-state traffic is priced in the decode model
+    else:
+        kv = (2.0 * ctx_sum * cfg.n_kv_heads * cfg.head_dim
+              * cache_bytes_per_elem * cfg.n_layers)
+    hbm = 2.0 * n_total + act + kv
+    return StepCost(flops, hbm, {
+        "linear": lin * moe_pad,
+        "attn_executed": attn_x,
+        "weight_bytes": 2.0 * n_total,
+        "act_bytes": act,
+        "kv_bytes": kv,
+        "tokens": tokens,
+        "ctx_sum": ctx_sum,
+    })
+
+
+def spec_verify_cost(
+    cfg: ModelConfig,
+    k: int,
+    batch: int,
+    s_ctx: int,
+    draft_layers: int | None = None,
+    cache_bytes_per_elem: float = 2.0,
+) -> StepCost:
+    """One speculative draft-and-verify round: k sequential drafter decode
+    steps + one (k+1)-wide verify window of the served model.
+
+    ``draft_layers``: layer count of the drafter (the ``truncate:N`` drafter
+    runs a prefix of the verifier; the ``self`` drafter re-runs all layers
+    on sparsified weights — same layer count, so the dense-equivalent FLOP
+    price is the honest upper bound the roofline uses).
+    """
+    draft_cfg = cfg
+    if draft_layers and draft_layers != cfg.n_layers:
+        draft_cfg = dataclasses.replace(cfg, n_layers=int(draft_layers))
+    d = decode_step_cost(draft_cfg, batch, s_ctx, cache_bytes_per_elem)
+    v = prefill_chunk_cost(cfg, batch, k + 1, start=int(s_ctx),
+                           cache_bytes_per_elem=cache_bytes_per_elem)
+    return StepCost(
+        k * d.flops + v.flops,
+        k * d.hbm_bytes + v.hbm_bytes,
+        {"draft_flops": k * d.flops, "verify_flops": v.flops,
+         "draft_bytes": k * d.hbm_bytes, "verify_bytes": v.hbm_bytes},
+    )
+
+
+def step_time(cost: StepCost, hw: HWTarget, n_chips: int = 1) -> float:
+    """Roofline device time for one launch: max(compute, memory) seconds."""
+    return max(cost.flops / (n_chips * hw.peak_flops_bf16),
+               cost.hbm_bytes / (n_chips * hw.hbm_bw))

@@ -3,16 +3,20 @@ from repro.serve.engine import ServeEngine, ServeConfig, SpecConfig
 from repro.serve.request import Request, SubmitRequest
 from repro.serve.sampling import sample_token, spec_accept
 from repro.serve.scheduler import BlockAllocator, ContinuousScheduler
+from repro.serve.trace import PhaseRecord, TraceRecorder, trace_energy
 
 __all__ = [
     "BlockAllocator",
     "ChaosConfig",
     "ContinuousScheduler",
+    "PhaseRecord",
     "Request",
     "ServeConfig",
     "ServeEngine",
     "SpecConfig",
     "SubmitRequest",
+    "TraceRecorder",
     "sample_token",
     "spec_accept",
+    "trace_energy",
 ]

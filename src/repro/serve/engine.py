@@ -142,6 +142,11 @@ class ServeConfig:
     # the end of every segment (PR 6) — on by default in the stress suites,
     # off in production paths (it walks host dicts, never the device)
     debug_invariants: bool = False
+    # per-segment trace recorder (serve/trace.py): opt-in host-side counters
+    # priced through roofline/analytic.py for the energy/perf-per-watt
+    # accounting.  False keeps the zero-overhead path — the scheduler never
+    # allocates a recorder and every hook site is one ``is None`` check.
+    trace: bool = False
 
 
 _SLOT_PROGRAMS = ("prefill_slot", "prefill_slots", "slot_segment",

@@ -394,6 +394,14 @@ class ContinuousScheduler:
             "chaos_slot_failures": 0,
         }
 
+        # opt-in per-segment trace recorder (ServeConfig.trace, ISSUE 7);
+        # None keeps every hook site to a single attribute check
+        self.trace = None
+        if engine.sc.trace:
+            from repro.serve.trace import TraceRecorder
+
+            self.trace = TraceRecorder(engine)
+
     # -------------------------------------------------------------- paged
 
     def _blocks_for(self, req: Request) -> int:
@@ -520,6 +528,13 @@ class ContinuousScheduler:
                 and slot not in self._prefill_start
                 and slot not in self._replay):
             self._swap_out(slot, req)
+        if self.trace is not None:
+            swapped = 0
+            if req._swap is not None:
+                swapped = sum(x.nbytes for x in
+                              jax.tree_util.tree_leaves(req._swap))
+            self.trace.record_preempt(self.stats["segments"],
+                                      len(req.tokens), swapped)
         self._vacate_slot(slot)
         req.state = QUEUED
         req.preempts += 1
@@ -624,6 +639,10 @@ class ContinuousScheduler:
         self.done = self.done.at[slot].set(False)
         self.active[slot] = True
         self.limit[slot] = req.prompt_len + req.max_new_tokens - 1
+        if self.trace is not None:
+            self.trace.record_swap_in(
+                self.stats["segments"],
+                sum(x.nbytes for x in jax.tree_util.tree_leaves(req._swap)))
         req._swap = None
         req._swap_nb = 0
         self.stats["swap_ins"] += 1
@@ -1018,6 +1037,10 @@ class ContinuousScheduler:
             self.stats["chunks_prefilled"] += len(rows)
             hist = self.stats["prefill_batch_hist"]
             hist[len(rows)] = hist.get(len(rows), 0) + 1
+            if self.trace is not None:
+                self.trace.record_prefill(
+                    self.stats["segments"], width, bucket,
+                    sum(r[2] for r in rows), [r[1] for r in rows])
         # the ONLY admit-round download: every launch's first tokens at once
         firsts_h = jax.device_get([f for _, f in launched])
         now = self.clock()
@@ -1117,6 +1140,9 @@ class ContinuousScheduler:
                         )
                     )
                     eng.call_counts["prefill_slot"] += 1
+                if self.trace is not None:
+                    self.trace.record_prefill(self.stats["segments"], 1,
+                                              len(prefix), len(prefix), [0])
                 resumed = bool(req.tokens)
                 pending.append((req, slot, first, resumed))
                 if resumed:
@@ -1233,6 +1259,10 @@ class ContinuousScheduler:
             for n, c in zip(*np.unique(per_step[live_step], return_counts=True)):
                 hist[int(n)] = hist.get(int(n), 0) + int(c)
             live_counts = live_step.sum(axis=1)  # live steps per slot
+            if self.trace is not None:
+                self.trace.record_spec(
+                    self.stats["segments"], self.n_slots, n_exec,
+                    int(live_step.sum()), int(per_step[live_step].sum()))
             toks = toks.reshape(toks.shape[0], -1)
         else:
             # every executed step has ≥1 live emission (while-mode exits
@@ -1240,6 +1270,9 @@ class ContinuousScheduler:
             n_exec = (int((toks >= 0).any(axis=0).sum())
                       if self.segment_mode == "while" else self.segment_len)
             live_counts = (toks >= 0).sum(axis=1)
+            if self.trace is not None:
+                self.trace.record_decode(self.stats["segments"], self.n_slots,
+                                         n_exec, int(live_counts.sum()))
         self.stats["steps_total"] += n_exec
         eos = eng.sc.eos_token
         now = self.clock()

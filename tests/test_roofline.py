@@ -92,3 +92,84 @@ def test_moe_active_params_much_smaller_than_total():
     cfg = get_config("moonshot-v1-16b-a3b")
     cost = analytic_cost(cfg, SHAPES["train_4k"])
     assert cost.n_active < 0.25 * cost.n_total
+
+
+# ------------------------------------------------- serving step costs (PR 7)
+
+
+def test_decode_step_cost_matches_closed_form():
+    """Hand-computed executed flops/bytes for a plain-attention config."""
+    from repro.roofline.analytic import decode_step_cost
+
+    cfg = get_config("tinyllama-1.1b")
+    b, s = 3, 40
+    c = decode_step_cost(cfg, b, s)
+    n_active, _ = _param_counts(cfg)
+    h, kh, dh, d, L = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.d_model, cfg.n_layers)
+    want_flops = 2.0 * n_active * b + 4.0 * h * dh * s * b * L
+    want_bytes = (n_active * 2.0 + 2.0 * b * s * kh * dh * 2.0 * L
+                  + 4.0 * b * d * 2.0 * L)
+    np.testing.assert_allclose(c.flops, want_flops, rtol=1e-12)
+    np.testing.assert_allclose(c.hbm_bytes, want_bytes, rtol=1e-12)
+
+
+def test_decode_step_cost_consistent_with_analytic_cost():
+    from repro.roofline.analytic import decode_step_cost
+    from repro.configs.base import ShapeSpec
+
+    for aid in ("tinyllama-1.1b", "moonshot-v1-16b-a3b", "rwkv6-3b"):
+        cfg = get_config(aid)
+        c = decode_step_cost(cfg, 4, 128)
+        cell = analytic_cost(cfg, ShapeSpec("x", 128, 4, "decode"))
+        assert c.flops == cell.hlo_flops_est, aid
+        assert c.hbm_bytes == cell.hbm_bytes, aid
+
+
+def test_prefill_chunk_cost_matches_closed_form():
+    from repro.roofline.analytic import prefill_chunk_cost
+
+    cfg = get_config("tinyllama-1.1b")
+    batch, chunk, start = 2, 16, 32
+    c = prefill_chunk_cost(cfg, batch, chunk, start=start)
+    n_active, n_total = _param_counts(cfg)
+    h, kh, dh, d, L = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.d_model, cfg.n_layers)
+    tokens = batch * chunk
+    # token i of a row starting at `start` attends start+i+1 keys
+    ctx_sum = batch * (chunk * start + chunk * (chunk + 1) / 2.0)
+    want_flops = 2.0 * n_active * tokens + 4.0 * h * dh * ctx_sum * L
+    want_bytes = (2.0 * n_total + 8.0 * tokens * d * 2.0 * L
+                  + 2.0 * ctx_sum * kh * dh * 2.0 * L)
+    np.testing.assert_allclose(c.flops, want_flops, rtol=1e-12)
+    np.testing.assert_allclose(c.hbm_bytes, want_bytes, rtol=1e-12)
+    # explicit ctx_sum overrides the uniform-start closed form
+    c2 = prefill_chunk_cost(cfg, batch, chunk, ctx_sum=ctx_sum)
+    np.testing.assert_allclose(c2.flops, c.flops, rtol=1e-12)
+
+
+def test_spec_verify_cost_is_draft_plus_verify():
+    from repro.roofline.analytic import (decode_step_cost, prefill_chunk_cost,
+                                         spec_verify_cost)
+    import dataclasses as _dc
+
+    cfg = get_config("tinyllama-1.1b")
+    k, b, s = 4, 3, 96
+    c = spec_verify_cost(cfg, k, b, s, draft_layers=2)
+    draft = decode_step_cost(_dc.replace(cfg, n_layers=2), b, s)
+    verify = prefill_chunk_cost(cfg, b, k + 1, start=s)
+    np.testing.assert_allclose(c.flops, k * draft.flops + verify.flops)
+    np.testing.assert_allclose(c.hbm_bytes,
+                               k * draft.hbm_bytes + verify.hbm_bytes)
+
+
+def test_step_time_is_roofline_max():
+    from repro.roofline.analytic import StepCost, step_time
+    from repro.roofline.hw import TPU_V5E
+
+    compute_bound = StepCost(1e15, 1.0, {})
+    memory_bound = StepCost(1.0, 1e12, {})
+    np.testing.assert_allclose(step_time(compute_bound, TPU_V5E),
+                               1e15 / TPU_V5E.peak_flops_bf16)
+    np.testing.assert_allclose(step_time(memory_bound, TPU_V5E),
+                               1e12 / TPU_V5E.hbm_bw)

@@ -1,0 +1,68 @@
+"""Docs link checker (ISSUE 7): dead relative links in the repo's markdown
+fail lint.
+
+Scans ``docs/*.md`` plus the top-level ``ROADMAP.md``/``README.md`` for
+inline markdown links ``[text](target)``, skips external schemes
+(http/https/mailto) and pure in-page anchors, resolves each remaining
+target relative to the file that contains it (dropping any ``#fragment``),
+and exits 1 listing every target that does not exist on disk.
+
+Usage (what ``make lint`` and the CI lint job run):
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; reference-style [text][ref] is not used in this repo.
+# [^)\s]+ keeps the match from swallowing prose after an unclosed paren.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_md_files(root: Path):
+    yield from sorted((root / "docs").glob("*.md"))
+    for name in ("ROADMAP.md", "README.md"):
+        p = root / name
+        if p.exists():
+            yield p
+
+
+def check(root: Path) -> list[str]:
+    dead = []
+    for md in iter_md_files(root):
+        text = md.read_text()
+        # fenced code blocks contain example syntax, not real links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                dead.append(f"{md.relative_to(root)}: ({target}) -> "
+                            f"{resolved} does not exist")
+    return dead
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    dead = check(root)
+    if dead:
+        print("dead links:")
+        for d in dead:
+            print(f"  - {d}")
+        return 1
+    n = sum(1 for _ in iter_md_files(root))
+    print(f"link check passed ({n} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
