@@ -2,10 +2,16 @@
 
 PY ?= python
 
-.PHONY: test lint bench-smoke bench perf-gate ci
+.PHONY: test test-http lint bench-smoke bench perf-gate ci
 
+# tier-1: everything but the http-marked end-to-end serving shard (which
+# compiles a real engine per module and would slow the whole matrix)
 test:
-	PYTHONPATH=src $(PY) -m pytest -x -q
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not http"
+
+# the end-to-end HTTP serving shard (real engine behind the front door)
+test-http:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m http
 
 lint:
 	ruff check .
@@ -20,7 +26,7 @@ bench:
 # regenerate the serving benches and compare against the committed baseline
 perf-gate:
 	cp BENCH_serve.json /tmp/BENCH_serve_baseline.json
-	BENCH_REPEATS=2 PYTHONPATH=src $(PY) benchmarks/run.py --only serve_decode,serve_continuous,serve_paged,serve_prefill,serve_energy
+	BENCH_REPEATS=2 PYTHONPATH=src $(PY) benchmarks/run.py --only serve_decode,serve_continuous,serve_paged,serve_prefill,serve_energy,serve_http
 	$(PY) benchmarks/perf_gate.py --baseline /tmp/BENCH_serve_baseline.json --new BENCH_serve.json
 
 ci: test bench-smoke

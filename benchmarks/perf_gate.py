@@ -6,7 +6,7 @@ Usage (what .github/workflows/ci.yml runs):
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
     BENCH_REPEATS=1 python benchmarks/run.py \
         --only serve_decode,serve_continuous,serve_paged,serve_prefill,\
-serve_spec,serve_robust,serve_energy
+serve_spec,serve_robust,serve_http,serve_energy
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
@@ -68,6 +68,11 @@ RATIO_METRICS = {
     # measured candidate's tok/s on the sweep bench (ISSUE 7 acceptance
     # criterion); lands through the warn-and-skip-on-new-section path
     "serve_energy.autotune.pick_ratio": 0.9,
+    # shedding load at the front door must not collapse the served rate:
+    # overload goodput >= 0.8x the uncontended closed-loop goodput (ISSUE 8
+    # acceptance criterion); lands through the warn-and-skip-on-new-section
+    # path
+    "serve_http.overload_goodput_ratio": 0.8,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
@@ -84,6 +89,8 @@ ABS_METRICS = [
     "serve_robust.uncontended.goodput_tok_s",
     "serve_energy.autotune.pick_tok_s",
     "serve_energy.photonic.tok_per_s_per_w",
+    "serve_http.closed.goodput_tok_s",
+    "serve_http.overload.goodput_tok_s",
 ]
 SPEEDUP_FLOOR_METRIC = "serve_continuous.speedup_tok_s"
 # hard floor, no tolerance: batched admission must cut cold TTFT p50 by
@@ -119,6 +126,14 @@ PREEMPT_METRIC, PREEMPT_FLOOR = "serve_robust.contended.preemptions", 1
 ENERGY_RATIO_METRIC, ENERGY_RATIO_FLOOR = (
     "serve_energy.energy_ratio_electronic_over_photonic", 1.0)
 AUTOTUNE_METRIC, AUTOTUNE_FLOOR = "serve_energy.autotune.pick_ratio", 0.9
+# HTTP front door (ISSUE 8) hard floors, new run only: client-observed
+# closed-loop TTFT p99 must stay under the generous bound the bench
+# records (an admission stall is minutes, not seconds), and the overload
+# phase must have actually shed load (>= 1 rejected request) or its
+# goodput ratio measured nothing
+HTTP_TTFT_METRIC = "serve_http.closed.ttft_p99_s"
+HTTP_TTFT_BOUND_METRIC = "serve_http.ttft_p99_bound_s"
+HTTP_REJECT_METRIC, HTTP_REJECT_FLOOR = "serve_http.overload.rejected", 1
 
 
 def _lookup(data: dict, path: str):
@@ -307,6 +322,32 @@ def main() -> int:
     else:
         print(f"autotune pick: {pick:.2f}x of sweep optimum >= "
               f"{AUTOTUNE_FLOOR}x")
+
+    ttft99 = _lookup(new, HTTP_TTFT_METRIC)
+    ttft_bound = _lookup(new, HTTP_TTFT_BOUND_METRIC)
+    if ttft99 is None or ttft_bound is None:
+        failures.append(
+            f"{HTTP_TTFT_METRIC} / {HTTP_TTFT_BOUND_METRIC}: missing from "
+            "new run"
+        )
+    elif ttft99 > ttft_bound:
+        failures.append(
+            f"{HTTP_TTFT_METRIC}: {ttft99:.2f}s > bound {ttft_bound:.0f}s — "
+            "client-observed TTFT p99 through the front door stalled"
+        )
+    else:
+        print(f"http ttft p99: {ttft99:.2f}s <= bound {ttft_bound:.0f}s")
+
+    rej = _lookup(new, HTTP_REJECT_METRIC)
+    if rej is None:
+        failures.append(f"{HTTP_REJECT_METRIC}: missing from new run")
+    elif rej < HTTP_REJECT_FLOOR:
+        failures.append(
+            f"{HTTP_REJECT_METRIC}: {rej} — the overload burst was never "
+            "rejected, so the goodput-under-overload ratio measured nothing"
+        )
+    else:
+        print(f"overload rejections: {rej} >= {HTTP_REJECT_FLOOR}")
 
     spec_traces = _lookup(new, SPEC_TRACE_METRIC)
     spec_bound = _lookup(new, SPEC_TRACE_BOUND_METRIC)

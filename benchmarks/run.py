@@ -8,14 +8,16 @@ env-overridable), each fenced with ``jax.block_until_ready``.  Repeat calls
 run with stdout suppressed so tables print once.
 
 ``serve_decode``, ``serve_continuous``, ``serve_paged``, ``serve_prefill``,
-``serve_spec``, ``serve_robust``, and ``serve_energy`` additionally record
+``serve_spec``, ``serve_robust``, ``serve_http`` (in ``serve_http.py``),
+and ``serve_energy`` additionally record
 into machine-readable ``BENCH_serve.json`` (each under its own section —
 compiled-vs-python decode tok/s per batch size, continuous-vs-static
 aggregate tok/s + p50/p95 request latency, paged-vs-dense KV tok/s + peak
 cache bytes, batched/chunked-vs-per-request admission TTFT + prefill trace
 counts, speculative-vs-plain decode tok/s + mean accepted length,
-overcommitted-vs-uncontended goodput under preemption, and energy-per-token
-photonic-vs-electronic + the autotune sweep gate) so
+overcommitted-vs-uncontended goodput under preemption, closed-loop vs
+overload goodput + client-observed TTFT through the HTTP front door, and
+energy-per-token photonic-vs-electronic + the autotune sweep gate) so
 the serving-perf trajectory
 is tracked across PRs; CI's perf gate (``benchmarks/perf_gate.py``) compares
 a fresh run against the committed copy.  Select a subset with
@@ -1186,6 +1188,8 @@ def roofline_table(path: str = "results/dryrun3.jsonl"):
 
 
 def main() -> None:
+    from serve_http import serve_http  # sibling module (HTTP front-door bench)
+
     benches = [
         ("table1_table3", table1_table3, lambda o: f"acc_sonic={o['acc_sonic']:.3f}"),
         ("fig6_dse", fig6_dse, lambda o: f"best_sp={o['best_sparsity']}"),
@@ -1207,6 +1211,8 @@ def main() -> None:
          lambda o: f"spec_speedup={o['tok_s_ratio']:.2f}x"),
         ("serve_robust", serve_robust,
          lambda o: f"goodput_ratio={o['goodput_ratio']:.2f}x"),
+        ("serve_http", serve_http,
+         lambda o: f"overload_ratio={o['overload_goodput_ratio']:.2f}x"),
         ("serve_energy", serve_energy,
          lambda o: (f"energy_ratio="
                     f"{o['energy_ratio_electronic_over_photonic']:.2f}x")),
@@ -1214,7 +1220,7 @@ def main() -> None:
     ]
     self_timed = {"serve_decode", "serve_continuous", "serve_paged",
                   "serve_prefill", "serve_spec", "serve_robust",
-                  "serve_energy"}
+                  "serve_http", "serve_energy"}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench names (default: all)")

@@ -1,0 +1,233 @@
+"""serve_http bench: closed-loop + overload load generation through the
+HTTP front door (PR 8).
+
+Drives the real engine behind ``FrontDoor`` with the stdlib asyncio client
+from ``repro.serve.http`` on a seeded heavy-tailed workload, two phases
+per rep:
+
+* **closed** — C concurrent clients each running M sequential streaming
+  requests (closed loop: the next request leaves after the previous
+  terminal event).  Records goodput (emitted tok/s over the phase wall)
+  and client-observed TTFT p50/p99.
+* **overload** — an open-loop burst of 1.5× more requests than the closed
+  phase against a small admission bound, so backpressure MUST fire:
+  records accepted/rejected counts and the goodput of the accepted set.
+
+Gated in ``perf_gate.py``: ``overload_goodput_ratio`` (overload goodput /
+closed goodput — shedding load must not collapse the served rate) through
+the warn-and-skip-on-new-section ratio path, plus hard floors on the new
+run only: client-observed TTFT p99 under the recorded bound, and ≥ 1
+overload rejection (otherwise the phase measured nothing).
+
+Before timing, one warmup pass asserts the HTTP path's greedy outputs are
+bit-identical to the offline ``ContinuousScheduler`` drain for the same
+arrival order (the PR 8 acceptance criterion), and the per-tenant pricing
+view (priced tok/s + J/token through the PR 7 trace layer) is recorded
+from the best closed rep.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+HOST = "127.0.0.1"
+# generous hard bound for client-observed TTFT p99 in the closed phase:
+# CPU CI runners are several-fold slower than a dev box, but a pathological
+# admission stall (the failure this guards) is minutes, not seconds
+TTFT_P99_BOUND_S = 30.0
+
+
+def _draw_workload(rng, n, max_prompt=16, max_new=48):
+    """Seeded heavy-tailed draws: short prompts, Pareto generation lengths."""
+    plens = rng.randint(4, max_prompt + 1, n)
+    news = np.clip((4 + rng.pareto(1.5, n) * 8).astype(int), 4, max_new)
+    prompts = [rng.randint(0, 1000, (p,)).astype(np.int32) for p in plens]
+    return prompts, [int(x) for x in news]
+
+
+def _payload(prompt, max_new, tenant):
+    return {"prompt": [int(t) for t in prompt], "max_new_tokens": max_new,
+            "tenant": tenant}
+
+
+async def _closed_phase(fd, clients):
+    """clients: list of payload lists; each client runs its list
+    sequentially, all clients concurrently.  Returns (wall, outs)."""
+    from repro.serve.http import generate
+
+    async def one(payloads):
+        outs = []
+        for p in payloads:
+            outs.append(await generate(HOST, fd.port, p))
+        return outs
+
+    t0 = time.perf_counter()
+    outs = await asyncio.gather(*[one(c) for c in clients])
+    return time.perf_counter() - t0, [o for c in outs for o in c]
+
+
+async def _overload_phase(fd, payloads):
+    """Open-loop burst: everything offered at once."""
+    from repro.serve.http import generate
+
+    t0 = time.perf_counter()
+    outs = await asyncio.gather(*[
+        generate(HOST, fd.port, p) for p in payloads])
+    return time.perf_counter() - t0, outs
+
+
+def serve_http():
+    from repro.serve import (ContinuousScheduler, ServeConfig, ServeEngine,
+                             TenantPolicy, TenantSpec)
+    from repro.serve.http import FrontDoor, HttpConfig
+    from repro.serve.trace import tenant_report, trace_energy
+    from repro.models.registry import get_arch
+    from repro.sharding.mesh import MeshPlan
+    # the harness owns repeat count + section-splicing JSON writer; the
+    # import is deferred so `run` (fully loaded by the time any bench
+    # runs) and this module never import-cycle
+    from run import BENCH_REPEATS, _merge_bench_json
+
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    n_slots, seg_len, max_len, block_len = 4, 16, 128, 16
+    engine = ServeEngine(arch, params, MeshPlan(),
+                         ServeConfig(max_len=max_len, kv_layout="paged",
+                                     block_len=block_len, trace=True))
+    tenants = ("acme", "hobby")
+
+    def mk_sched():
+        return ContinuousScheduler(
+            engine, n_slots=n_slots, segment_len=seg_len,
+            segment_mode="while", n_blocks=n_slots * max_len // block_len,
+            policy=TenantPolicy(tenants={"acme": TenantSpec(weight=3.0),
+                                         "hobby": TenantSpec(weight=1.0)}))
+
+    rng = np.random.RandomState(0)
+    n_clients, per_client = 4, 3
+    prompts, news = _draw_workload(rng, n_clients * per_client)
+    clients = []
+    for c in range(n_clients):
+        sl = slice(c * per_client, (c + 1) * per_client)
+        clients.append([_payload(p, n, tenants[c % 2])
+                        for p, n in zip(prompts[sl], news[sl])])
+    over_prompts, over_news = _draw_workload(
+        rng, int(n_clients * per_client * 1.5))
+    over_payloads = [_payload(p, n, tenants[i % 2])
+                     for i, (p, n) in enumerate(zip(over_prompts, over_news))]
+
+    # -- warmup: compiles the programs AND asserts the acceptance
+    # criterion — HTTP-path outputs bit-identical to the offline drain for
+    # the same arrival order
+    async def equivalence(fd):
+        from repro.serve.http import open_generate, read_sse_event
+
+        conns = []
+        for p, n in zip(prompts, news):  # sequential heads fix the order
+            conns.append(await open_generate(
+                HOST, fd.port, _payload(p, n, tenants[0])))
+        outs = []
+        for reader, writer, status, _h in conns:
+            assert status == 200, status
+            while True:
+                ev = await read_sse_event(reader)
+                if ev.get("event") == "done":
+                    outs.append(ev["data"]["tokens"])
+                    break
+            writer.close()
+        return outs
+
+    async def with_fd(sched, cfg, coro_fn):
+        fd = FrontDoor(sched, cfg)
+        await fd.start()
+        try:
+            return await coro_fn(fd), fd
+        finally:
+            await fd.stop()
+
+    offline = mk_sched()
+    handles = [offline.submit(np.asarray(p), n, tenant=tenants[0])
+               for p, n in zip(prompts, news)]
+    offline.run()
+    want = [list(h.tokens) for h in handles]
+    got, _ = asyncio.run(with_fd(mk_sched(), HttpConfig(), equivalence))
+    assert got == want, "HTTP-path outputs diverged from the offline drain"
+
+    # -- timed reps
+    reps = max(BENCH_REPEATS, 2)
+    closed_runs, over_runs = [], []
+    for _ in range(reps):
+        sched = mk_sched()
+        (wall, outs), _fd = asyncio.run(with_fd(
+            sched, HttpConfig(), lambda fd: _closed_phase(fd, clients)))
+        assert all(o["status"] == 200 for o in outs)
+        toks = sum(len(o["body"]["tokens"]) for o in outs)
+        ttfts = sorted(o["ttft_s"] for o in outs)
+        closed_runs.append((wall, toks, ttfts, sched))
+
+        (wall, outs), fd = asyncio.run(with_fd(
+            mk_sched(), HttpConfig(max_pending=3),
+            lambda fd: _overload_phase(fd, over_payloads)))
+        acc = [o for o in outs if o["status"] == 200]
+        rej = [o for o in outs if o["status"] == 429]
+        assert len(acc) + len(rej) == len(outs), [o["status"] for o in outs]
+        assert rej, "overload burst was never rejected — raise the offer"
+        assert all(int(o["headers"]["retry-after"]) >= 1 for o in rej)
+        over_runs.append(
+            (wall, sum(len(o["body"]["tokens"]) for o in acc),
+             len(acc), len(rej)))
+
+    wall, toks, ttfts, best_sched = min(
+        closed_runs, key=lambda r: r[0] / r[1])
+    o_wall, o_toks, o_acc, o_rej = min(
+        over_runs, key=lambda r: r[0] / max(r[1], 1))
+    closed_goodput = toks / wall
+    over_goodput = o_toks / o_wall
+    out = {
+        "arch": "tinyllama-1.1b (reduced)",
+        "workload": {
+            "n_clients": n_clients, "per_client": per_client,
+            "prompt_lens": [len(p) for p in prompts], "new_tokens": news,
+            "overload_offered": len(over_payloads), "n_slots": n_slots,
+            "segment_len": seg_len, "block_len": block_len,
+            "max_pending_overload": 3,
+        },
+        "closed": {
+            "goodput_tok_s": closed_goodput,
+            "tokens": toks,
+            "ttft_p50_s": float(np.percentile(ttfts, 50)),
+            "ttft_p99_s": float(np.percentile(ttfts, 99)),
+        },
+        "overload": {
+            "goodput_tok_s": over_goodput,
+            "accepted": o_acc,
+            "rejected": o_rej,
+            "tokens": o_toks,
+        },
+        "overload_goodput_ratio": over_goodput / closed_goodput,
+        "ttft_p99_bound_s": TTFT_P99_BOUND_S,
+    }
+    # per-tenant pricing from the best closed rep's trace: emitted-token
+    # shares priced into tok/s and J/token (the PR 7 energy layer)
+    trace = best_sched.trace
+    energy = trace_energy(trace, weight_sparsity=0.75, act_sparsity=0.5,
+                          platforms=("SONIC",))
+    out["tenants"] = tenant_report(trace, energy, wall_s=wall)
+
+    print("\n== serve_http: closed-loop vs overload through the front door ==")
+    print(f"{'phase':>10s} {'tok/s':>8s} {'accepted':>9s} {'rejected':>9s}")
+    print(f"{'closed':>10s} {closed_goodput:8.1f} {len(prompts):9d} {0:9d}")
+    print(f"{'overload':>10s} {over_goodput:8.1f} {o_acc:9d} {o_rej:9d}")
+    print(f"overload goodput ratio {out['overload_goodput_ratio']:.2f}x, "
+          f"ttft p50={out['closed']['ttft_p50_s']:.2f}s "
+          f"p99={out['closed']['ttft_p99_s']:.2f}s "
+          f"(bound {TTFT_P99_BOUND_S:.0f}s)")
+    for name, row in out["tenants"].items():
+        print(f"tenant {name:>8s}: {row['tokens']:4d} tokens "
+              f"({row['share']:.0%}), {row['tok_s']:.1f} tok/s, "
+              f"{row['j_per_token']:.3e} J/token")
+    _merge_bench_json("serve_http", out)
+    return out

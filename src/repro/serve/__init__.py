@@ -1,22 +1,33 @@
 from repro.serve.chaos import ChaosConfig
 from repro.serve.engine import ServeEngine, ServeConfig, SpecConfig
+from repro.serve.http import FrontDoor, HttpConfig
+from repro.serve.policy import (PriorityClass, RateLimited, TenantPolicy,
+                                TenantSpec)
 from repro.serve.request import Request, SubmitRequest
 from repro.serve.sampling import sample_token, spec_accept
 from repro.serve.scheduler import BlockAllocator, ContinuousScheduler
-from repro.serve.trace import PhaseRecord, TraceRecorder, trace_energy
+from repro.serve.trace import (PhaseRecord, TraceRecorder, tenant_report,
+                               trace_energy)
 
 __all__ = [
     "BlockAllocator",
     "ChaosConfig",
     "ContinuousScheduler",
+    "FrontDoor",
+    "HttpConfig",
     "PhaseRecord",
+    "PriorityClass",
+    "RateLimited",
     "Request",
     "ServeConfig",
     "ServeEngine",
     "SpecConfig",
     "SubmitRequest",
+    "TenantPolicy",
+    "TenantSpec",
     "TraceRecorder",
     "sample_token",
     "spec_accept",
+    "tenant_report",
     "trace_energy",
 ]

@@ -37,6 +37,11 @@ class SubmitRequest:
     on_token: Callable[["Request", int], None] | None = None
     ttft_deadline_s: float | None = None  # submit → first token
     deadline_s: float | None = None  # submit → last token
+    # multi-tenant routing (PR 8): both default through the scheduler's
+    # TenantPolicy when one is installed ("default" tenant / the tenant's
+    # default priority class), and are plain labels without one
+    tenant: str | None = None
+    priority: str | None = None
 
 
 @dataclasses.dataclass
@@ -58,6 +63,12 @@ class Request:
     ttft_deadline_s: float | None = None
     deadline_s: float | None = None
     cancel_requested: bool = False
+    # multi-tenant routing (resolved at submit; see TenantPolicy)
+    tenant: str = "default"
+    priority: str = "standard"
+    # why the request stopped: "stop" (eos), "length" (budget),
+    # "cancelled", or "expired"; None until terminal
+    finish_reason: str | None = None
     # preemption accounting: times evicted mid-flight, and when the last
     # eviction happened (cleared at the first post-readmit emission — the
     # scheduler uses the gap as the readmit TTFT penalty)

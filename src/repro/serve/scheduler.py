@@ -104,6 +104,7 @@ import numpy as np
 
 from repro.serve.chaos import ChaosConfig
 from repro.serve.engine import ServeEngine
+from repro.serve.policy import RateLimited, TenantPolicy
 from repro.serve.request import (CANCELLED, EXPIRED, FINISHED, QUEUED,
                                  RUNNING, Request, SubmitRequest)
 from repro.utils.logging import get_logger
@@ -208,6 +209,7 @@ class ContinuousScheduler:
         overcommit: float = 1.0,
         preempt_mode: str = "recompute",
         chaos: ChaosConfig | None = None,
+        policy: TenantPolicy | None = None,
     ):
         assert n_slots >= 1 and segment_len >= 1, (n_slots, segment_len)
         assert overcommit >= 1.0, f"overcommit must be >= 1.0, got {overcommit}"
@@ -270,6 +272,22 @@ class ContinuousScheduler:
         # so a budget below the chunk length still makes progress.
         assert prefill_token_budget >= 0, prefill_token_budget
         self.prefill_token_budget = int(prefill_token_budget) if self.chunked else 0
+        # multi-tenant admission policy (PR 8): when installed, submit
+        # routes tenants/priorities and rate-limits through it, and
+        # _claim_queue_head admits its DRR pick instead of the FIFO head.
+        # Per-class chunk caps must be members of the bucket set so capped
+        # chunks reuse existing compiled prefill shapes (the trace bound
+        # is unchanged).
+        self.policy = policy
+        if policy is not None and self.chunked:
+            for cls in policy.classes.values():
+                cap = cls.prefill_chunk_cap
+                if cap and cap not in self.buckets:
+                    raise ValueError(
+                        f"priority class '{cls.name}': prefill_chunk_cap "
+                        f"{cap} is not in the scheduler's bucket set "
+                        f"{self.buckets}"
+                    )
         # slot -> next chunk start offset for requests still prefilling
         # (admitted to a slot, not yet active; chunks advance one per round)
         self._prefill_start: dict[int, int] = {}
@@ -392,6 +410,10 @@ class ContinuousScheduler:
             "chaos_exhausts": 0,
             "chaos_cancels": 0,
             "chaos_slot_failures": 0,
+            # multi-tenant accounting (PR 8): emitted tokens per tenant
+            # label ("default" without a policy) — the billing basis the
+            # trace layer prices into per-tenant J/token
+            "tenant_tokens": {},
         }
 
         # opt-in per-segment trace recorder (ServeConfig.trace, ISSUE 7);
@@ -663,6 +685,7 @@ class ContinuousScheduler:
 
     def _retire_terminal(self, req: Request, state: str, now: float) -> None:
         req.state = state
+        req.finish_reason = state  # "cancelled" / "expired"
         req.finish_t = now
         req._swap, req._swap_nb = None, 0  # drop any host KV payload
         self.stats["cancelled" if state == CANCELLED else "expired"] += 1
@@ -727,6 +750,16 @@ class ContinuousScheduler:
                 cands[int(rng.randint(len(cands)))].cancel()
                 self.stats["chaos_cancels"] += 1
 
+    def _count_token(self, req: Request) -> None:
+        """Per-tenant billing for one emitted token (replays excluded —
+        they were billed at first emission)."""
+        tt = self.stats["tenant_tokens"]
+        tt[req.tenant] = tt.get(req.tenant, 0) + 1
+        if self.policy is not None:
+            self.policy.note_tokens(req.tenant)
+        if self.trace is not None:
+            self.trace.note_tenant_tokens(req.tenant)
+
     def _note_emission_after_readmit(self, req: Request, now: float) -> None:
         """First emission after a readmission closes the preemption gap —
         the readmit TTFT penalty surfaced in ``stats``."""
@@ -744,16 +777,21 @@ class ContinuousScheduler:
         on_token=None,
         ttft_deadline_s: float | None = None,
         deadline_s: float | None = None,
+        tenant: str | None = None,
+        priority: str | None = None,
     ) -> Request:
         """Queue one request; returns its live handle (tokens stream into
         ``handle.tokens`` as segments complete).  Invalid submissions raise
         ``ValueError`` here instead of surfacing opaque shape/device errors
-        mid-run."""
+        mid-run; with a :class:`TenantPolicy` installed an over-rate tenant
+        raises :class:`RateLimited` (after shape validation, so malformed
+        requests still surface as ``ValueError``)."""
         if isinstance(prompt, SubmitRequest):
             sub = prompt
         else:
             sub = SubmitRequest(prompt, max_new_tokens, on_token,
-                                ttft_deadline_s, deadline_s)
+                                ttft_deadline_s, deadline_s,
+                                tenant=tenant, priority=priority)
         p = np.asarray(sub.prompt, np.int32).reshape(-1)
         max_len = self.engine.sc.max_len
         if p.size < 1:
@@ -780,24 +818,47 @@ class ContinuousScheduler:
             d = getattr(sub, name)
             if d is not None and d <= 0:
                 raise ValueError(f"{name} must be positive, got {d}")
+        if self.paged:
+            total = int(p.size) + sub.max_new_tokens + self.spec_k
+            full = -(-total // self.block_len)
+            if full > self.allocator.capacity:
+                # liveness guard: a head request the pool can never satisfy
+                # would defer admission forever once all slots drain — and
+                # the preemption loop's termination proof needs every single
+                # request's full budget to fit the pool on its own
+                raise ValueError(
+                    f"request needs {full} blocks but the pool has "
+                    f"{self.allocator.capacity}"
+                )
+        req_tenant = sub.tenant if sub.tenant is not None else "default"
+        ttft = sub.ttft_deadline_s
+        if self.policy is not None:
+            spec = self.policy.spec_for(req_tenant)
+            req_priority = (sub.priority if sub.priority is not None
+                            else spec.default_priority)
+            cls = self.policy.class_for(req_priority)  # unknown -> ValueError
+            if ttft is None:
+                ttft = cls.ttft_deadline_s  # class default TTFT SLO
+            # rate gate last: malformed requests fail as ValueError above
+            # even when the tenant is also over rate
+            retry = self.policy.charge_rate(req_tenant, self.clock())
+            if retry is not None:
+                raise RateLimited(req_tenant, retry)
+            self.policy.note_submitted(req_tenant)
+        else:
+            req_priority = (sub.priority if sub.priority is not None
+                            else "standard")
         req = Request(
             rid=self._next_rid,
             prompt=p,
             max_new_tokens=sub.max_new_tokens,
             on_token=sub.on_token,
             submit_t=self.clock(),
-            ttft_deadline_s=sub.ttft_deadline_s,
+            ttft_deadline_s=ttft,
             deadline_s=sub.deadline_s,
+            tenant=req_tenant,
+            priority=req_priority,
         )
-        if self.paged and self._blocks_for(req) > self.allocator.capacity:
-            # liveness guard: a head request the pool can never satisfy
-            # would defer admission forever once all slots drain — and the
-            # preemption loop's termination proof needs every single
-            # request's full budget to fit the pool on its own
-            raise ValueError(
-                f"request needs {self._blocks_for(req)} blocks but the pool "
-                f"has {self.allocator.capacity}"
-            )
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -839,7 +900,11 @@ class ContinuousScheduler:
         single-row decode, which can flip near-tie greedy argmaxes."""
         if not self.queue:
             return None
-        req = self.queue[0]
+        # policy pick: the TenantPolicy's DRR/priority choice replaces the
+        # FIFO head; select() is a pure peek, so a deferral below leaves
+        # the policy state untouched and the pick re-derives next round
+        req = (self.queue[0] if self.policy is None
+               else self.policy.select(self.queue))
         prefix = None if req._swap is not None else req.prompt
         if self.paged:
             full = self._blocks_for(req)
@@ -863,7 +928,11 @@ class ContinuousScheduler:
             self._prefix[slot] = prefix
             if req.tokens:
                 self._replay[slot] = collections.deque(req.tokens)
-        self.queue.popleft()
+        if self.policy is None:
+            self.queue.popleft()
+        else:
+            self.policy.on_admitted(self.queue, req)  # commit the DRR pick
+            self.queue.remove(req)
         req.state = RUNNING
         req.slot_history.append(slot)
         self.stats["admitted"] += 1
@@ -909,8 +978,13 @@ class ContinuousScheduler:
         remainder fits, then the remainder padded up to the smallest
         covering bucket."""
         rem = len(self._prefix[slot]) - start
-        if rem > self.prefill_chunk:
-            return self.prefill_chunk, self.prefill_chunk, False
+        cap = self.prefill_chunk
+        if self.policy is not None:
+            # per-class chunk cap (validated at init to be a bucket member,
+            # so capped chunks reuse existing compiled prefill shapes)
+            cap = self.policy.chunk_cap(self.slots[slot].priority) or cap
+        if rem > cap:
+            return cap, cap, False
         bucket = next(b for b in self.buckets if b >= rem)
         return rem, bucket, True
 
@@ -937,6 +1011,17 @@ class ContinuousScheduler:
         self._claim_free_slots()
         n_live = 0
         budget = self.prefill_token_budget
+        if self.policy is not None and self._prefill_start:
+            # per-class budget override: honor the most generous budget
+            # among the round's prefilling classes, so an interactive
+            # prefill is never throttled down to a batch neighbor's budget
+            overrides = [
+                self.policy.token_budget(self.slots[s].priority)
+                for s in self._prefill_start
+            ]
+            overrides = [b for b in overrides if b is not None]
+            if overrides:
+                budget = max(overrides)
         spent = 0
         while self._prefill_start:
             went_live, tokens = self._prefill_round(
@@ -1073,6 +1158,7 @@ class ContinuousScheduler:
                 if req.first_token_t is None:
                     req.first_token_t = now
                 req._emit(int(fh[i]))
+                self._count_token(req)
                 self._note_emission_after_readmit(req, now)
                 n_live += 1
                 if len(req.tokens) >= req.max_new_tokens:
@@ -1080,6 +1166,7 @@ class ContinuousScheduler:
                     # ever decoding, so its blocks/row free immediately
                     # (the written KV is never read)
                     req.state = FINISHED
+                    req.finish_reason = "length"
                     req.finish_t = now
                     self._vacate_slot(slot)
                     self.stats["retired"] += 1
@@ -1184,9 +1271,11 @@ class ContinuousScheduler:
             if req.first_token_t is None:
                 req.first_token_t = now
             req._emit(int(first))
+            self._count_token(req)
             self._note_emission_after_readmit(req, now)
             if len(req.tokens) >= req.max_new_tokens:
                 req.state = FINISHED
+                req.finish_reason = "length"
                 req.finish_t = now
                 self.stats["retired"] += 1
         return len(pending)
@@ -1304,12 +1393,14 @@ class ContinuousScheduler:
                     continue
                 if len(req.tokens) < req.max_new_tokens:
                     req._emit(int(t))
+                    self._count_token(req)
                     emitted_any = True
                     saw_eos = saw_eos or (eos >= 0 and t == eos)
             if emitted_any:
                 self._note_emission_after_readmit(req, now)
             if saw_eos or len(req.tokens) >= req.max_new_tokens:
                 req.state = FINISHED
+                req.finish_reason = "stop" if saw_eos else "length"
                 req.finish_t = now
                 self._vacate_slot(slot)
                 self.stats["retired"] += 1

@@ -64,6 +64,10 @@ class TraceRecorder:
         self.cache_bytes_per_elem = (
             1.03 if engine.plan.cache_quant_int8 else 2.0)
         self.events: list[PhaseRecord] = []
+        # per-tenant emitted-token counters (PR 8): the billing basis —
+        # the scheduler calls note_tenant_tokens once per live emission
+        # (replays excluded), keyed by the request's tenant label
+        self.tenant_tokens: dict[str, int] = {}
         self.totals: dict[str, float] = {
             "prefill_tokens": 0, "prefill_launches": 0,
             "decode_tokens": 0, "decode_segments": 0, "decode_steps": 0,
@@ -151,6 +155,10 @@ class TraceRecorder:
         self._push(PhaseRecord("preempt", segment, 1, 0, 0,
                                0.0, float(swap_bytes)))
 
+    def note_tenant_tokens(self, tenant: str, n: int = 1) -> None:
+        """One (or ``n``) live emissions billed to ``tenant``."""
+        self.tenant_tokens[tenant] = self.tenant_tokens.get(tenant, 0) + n
+
     # -- views ------------------------------------------------------------
     @property
     def tokens_total(self) -> int:
@@ -161,6 +169,8 @@ class TraceRecorder:
         out = dict(self.totals)
         out["tokens_total"] = self.tokens_total
         out["events"] = len(self.events)
+        if self.tenant_tokens:
+            out["tenant_tokens"] = dict(self.tenant_tokens)
         return out
 
 
@@ -200,4 +210,33 @@ def trace_energy(trace, cfg=None, weight_sparsity: float = 0.0,
             "tok_per_s_per_w": rep.fps_per_w,
             "trace_energy_j": j_tok * tokens,
         }
+    return out
+
+
+def tenant_report(trace, energy: dict | None = None, wall_s: float | None = None,
+                  platform: str = "SONIC") -> dict:
+    """Per-tenant pricing view (PR 8): each tenant's emitted-token share of
+    the traced run, with priced tok/s (``wall_s`` given) and J/token
+    (``energy`` = a ``trace_energy`` result).
+
+    Billing model: the platform's TOTAL traced energy — including the
+    masked/padded work no single request asked for — is apportioned to
+    tenants by their share of live emissions, so each tenant's J/token
+    carries its share of the serving overhead rather than the bare
+    marginal token price.
+    """
+    billed = dict(trace.tenant_tokens)
+    total = sum(billed.values())
+    plat = (energy or {}).get("platforms", {}).get(platform)
+    out: dict = {}
+    for tenant, tokens in sorted(billed.items()):
+        share = tokens / total if total else 0.0
+        row = {"tokens": tokens, "share": share}
+        if wall_s is not None and wall_s > 0:
+            row["tok_s"] = tokens / wall_s
+        if plat is not None and tokens:
+            energy_j = plat["trace_energy_j"] * share
+            row["energy_j"] = energy_j
+            row["j_per_token"] = energy_j / tokens
+        out[tenant] = row
     return out

@@ -1,0 +1,274 @@
+"""Fairness/property tests for the multi-tenant admission policy (PR 8).
+
+Pure host-side tests — no engine, no JAX compile.  The DRR properties are
+checked over seeded randomized tenant mixes with a fake clock:
+
+* weighted shares: over a long backlogged window each tenant's admitted
+  token footprint is proportional to its weight within tolerance;
+* no starvation: while backlogged, every tenant is served within a bound
+  derived from the quantum (each RR cycle moves it quantum×weight closer);
+* strict priority: a higher class admits before any lower one;
+* select() is a pure, deterministic peek matching on_admitted's commit.
+"""
+from __future__ import annotations
+
+import collections
+import random
+
+import numpy as np
+import pytest
+
+from repro.serve.policy import (DEFAULT_CLASSES, PriorityClass, RateLimited,
+                                TenantPolicy, TenantSpec)
+from repro.serve.request import Request
+
+
+def _req(rid: int, tenant: str, priority: str = "standard",
+         cost: int = 100, preempted: bool = False) -> Request:
+    assert cost >= 11
+    r = Request(rid=rid, prompt=np.zeros(cost - 10, np.int32),
+                max_new_tokens=10, tenant=tenant, priority=priority)
+    if preempted:
+        r.slot_history.append(0)
+    return r
+
+
+def _admit_next(policy: TenantPolicy,
+                queue: collections.deque) -> Request | None:
+    """One scheduler admission: pure select, then commit + dequeue —
+    exactly the `_claim_queue_head` call sequence."""
+    req = policy.select(queue)
+    if req is None:
+        return None
+    policy.on_admitted(queue, req)
+    queue.remove(req)
+    return req
+
+
+# --------------------------------------------------------------- weighted DRR
+
+def test_weighted_shares_converge():
+    """Backlogged equal-cost tenants are served in weight proportion."""
+    weights = {"a": 3.0, "b": 1.0, "c": 2.0}
+    policy = TenantPolicy(
+        tenants={t: TenantSpec(weight=w) for t, w in weights.items()})
+    queue: collections.deque = collections.deque()
+    rid = 0
+    for t in weights:  # keep every tenant backlogged with 2 queued each
+        for _ in range(2):
+            queue.append(_req(rid, t))
+            rid += 1
+    served = collections.Counter()
+    for _ in range(600):
+        got = _admit_next(policy, queue)
+        served[got.tenant] += 1
+        queue.append(_req(rid, got.tenant))  # refill: stays backlogged
+        rid += 1
+    total_w = sum(weights.values())
+    for t, w in weights.items():
+        share = served[t] / 600
+        assert abs(share - w / total_w) < 0.05, (t, share, served)
+
+
+def test_weighted_shares_cost_weighted():
+    """Shares are token-footprint-weighted: a tenant submitting 4× larger
+    requests at equal weight is admitted ~4× less often, so its token
+    share still matches its weight."""
+    policy = TenantPolicy(tenants={"small": TenantSpec(), "big": TenantSpec()})
+    costs = {"small": 50, "big": 200}
+    queue: collections.deque = collections.deque()
+    rid = 0
+    for t in costs:
+        queue.append(_req(rid, t, cost=costs[t]))
+        rid += 1
+    tokens = collections.Counter()
+    for _ in range(500):
+        got = _admit_next(policy, queue)
+        tokens[got.tenant] += costs[got.tenant]
+        queue.append(_req(rid, got.tenant, cost=costs[got.tenant]))
+        rid += 1
+    total = sum(tokens.values())
+    share = tokens["small"] / total
+    assert abs(share - 0.5) < 0.06, (share, tokens)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_no_starvation_randomized(seed):
+    """Seeded random mixes: while backlogged, every tenant is served within
+    the DRR bound — each full RR cycle grants quantum×weight, so service
+    arrives within ceil(max_cost/(quantum·w_min))+1 cycles of admissions."""
+    rng = random.Random(seed)
+    n_tenants = rng.randint(2, 5)
+    quantum = rng.choice([16, 64, 128])
+    names = [f"t{i}" for i in range(n_tenants)]
+    weights = {t: rng.choice([0.5, 1.0, 2.0, 4.0]) for t in names}
+    policy = TenantPolicy(
+        tenants={t: TenantSpec(weight=w) for t, w in weights.items()},
+        quantum=quantum)
+    max_cost = 300
+    queue: collections.deque = collections.deque()
+    rid = 0
+
+    def refill(t):
+        nonlocal rid
+        queue.append(_req(rid, t, cost=rng.randint(11, max_cost)))
+        rid += 1
+
+    for t in names:
+        for _ in range(rng.randint(1, 3)):
+            refill(t)
+    # DRR latency bound, in token footprint: while t waits it gains
+    # quantum×w_t per RR cycle, so it is served within
+    # C_t = ceil(max_cost/(quantum·w_t)) cycles; meanwhile each other
+    # tenant u consumes at most quantum·w_u·C_t plus one banked deficit
+    # (banked credit is always < its head's cost <= max_cost)
+    def bound(t):
+        c_t = -(-max_cost // int(quantum * weights[t]))
+        return sum(quantum * weights[u] * c_t + max_cost
+                   for u in names if u != t)
+
+    others_cost = {t: 0.0 for t in names}
+    for _ in range(400):
+        got = _admit_next(policy, queue)
+        cost = got.prompt_len + got.max_new_tokens
+        for t in names:
+            if t == got.tenant:
+                others_cost[t] = 0.0
+            else:
+                others_cost[t] += cost
+                assert others_cost[t] <= bound(t), (
+                    f"seed={seed}: tenant {t} starved — others served "
+                    f"{others_cost[t]} tokens (bound {bound(t)}, "
+                    f"weights {weights}, quantum {quantum})")
+        refill(got.tenant)
+
+
+# ----------------------------------------------------------------- priorities
+
+def test_strict_priority_ordering():
+    """Every queued higher-level request admits before any lower-level one,
+    regardless of tenants and weights."""
+    policy = TenantPolicy(tenants={"a": TenantSpec(weight=0.5),
+                                   "b": TenantSpec(weight=8.0)})
+    queue: collections.deque = collections.deque([
+        _req(0, "b", "batch"), _req(1, "a", "interactive"),
+        _req(2, "b", "standard"), _req(3, "a", "batch"),
+        _req(4, "b", "interactive"), _req(5, "a", "standard"),
+    ])
+    order = [_admit_next(policy, queue).priority for _ in range(6)]
+    levels = {c.name: c.level for c in DEFAULT_CLASSES}
+    got = [levels[p] for p in order]
+    assert got == sorted(got, reverse=True), order
+
+
+def test_priority_preempted_requests_first():
+    """A preemption victim (non-empty slot_history) readmits before
+    everything — even higher classes — in queue order."""
+    policy = TenantPolicy()
+    victim = _req(7, "z", "batch", preempted=True)
+    queue: collections.deque = collections.deque([
+        _req(0, "a", "interactive"), victim, _req(1, "b", "interactive")])
+    assert policy.select(queue) is victim
+    policy.on_admitted(queue, victim)
+    queue.remove(victim)
+    assert policy.select(queue).rid == 0
+
+
+def test_select_is_pure_and_deterministic():
+    """select() twice returns the same pick and commits nothing: the
+    deferral path (paged pool pressure) must not advance DRR state."""
+    policy = TenantPolicy(tenants={"a": TenantSpec(weight=2.0),
+                                   "b": TenantSpec()})
+    queue: collections.deque = collections.deque(
+        [_req(i, t) for i, t in enumerate("abab")])
+    before = (dict(policy._deficit), dict(policy._visit))
+    first = policy.select(queue)
+    assert policy.select(queue) is first
+    assert (dict(policy._deficit), dict(policy._visit)) == before
+    # the commit then matches the peek (on_admitted asserts this itself)
+    policy.on_admitted(queue, first)
+    queue.remove(first)
+    assert (dict(policy._deficit), dict(policy._visit)) != before
+
+
+def test_idle_tenants_bank_no_credit():
+    """A tenant that goes idle loses unspent deficit: returning after a
+    quiet spell gives no burst beyond its weighted share."""
+    policy = TenantPolicy(tenants={"a": TenantSpec(), "b": TenantSpec()},
+                          quantum=64)
+    queue: collections.deque = collections.deque([_req(0, "a", cost=64)])
+    # many solo admissions for a while b is idle
+    rid = 1
+    for _ in range(50):
+        got = _admit_next(policy, queue)
+        assert got.tenant == "a"
+        queue.append(_req(rid, "a", cost=64))
+        rid += 1
+    assert policy._deficit.get((1, "b"), 0.0) == 0.0
+    # b returns: fair alternation, not a banked-credit burst
+    for _ in range(4):
+        queue.append(_req(rid, "b", cost=64))
+        rid += 1
+    served = [
+        _admit_next(policy, queue).tenant
+        for _ in range(4)
+    ]
+    assert served.count("b") <= 3, served
+
+
+# -------------------------------------------------------------- rate limiting
+
+def test_token_bucket_rate_limit():
+    policy = TenantPolicy(tenants={"a": TenantSpec(rate=1.0, burst=2)})
+    now = 100.0
+    assert policy.charge_rate("a", now) is None  # burst token 1
+    assert policy.charge_rate("a", now) is None  # burst token 2
+    retry = policy.charge_rate("a", now)
+    assert retry is not None and 0 < retry <= 1.0
+    # refill at 1 req/s: half a token after 0.5s is still short
+    assert policy.charge_rate("a", now + 0.5) is not None
+    assert policy.charge_rate("a", now + 1.6) is None
+    assert policy.rate_rejections["a"] == 2
+    # unlimited tenants are never charged
+    assert policy.charge_rate("free", now) is None
+    assert policy.snapshot()["a"]["rate_rejections"] == 2
+
+
+def test_rate_limited_exception_carries_hint():
+    err = RateLimited("a", 2.5)
+    assert err.tenant == "a" and err.retry_after_s == 2.5
+    assert "retry" in str(err)
+
+
+# ------------------------------------------------------------------ knobs
+
+def test_class_knob_accessors():
+    classes = (
+        PriorityClass("interactive", level=2, prefill_chunk_cap=0,
+                      ttft_deadline_s=0.5),
+        PriorityClass("batch", level=0, prefill_chunk_cap=16,
+                      prefill_token_budget=128),
+    )
+    policy = TenantPolicy(classes=classes,
+                          default_spec=TenantSpec(default_priority="batch"))
+    assert policy.chunk_cap("interactive") == 0
+    assert policy.chunk_cap("batch") == 16
+    assert policy.token_budget("interactive") is None
+    assert policy.token_budget("batch") == 128
+    assert policy.ttft_default("interactive") == 0.5
+    assert policy.spec_for("anyone").default_priority == "batch"
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="duplicate"):
+        TenantPolicy(classes=(PriorityClass("a", 0), PriorityClass("a", 1)))
+    with pytest.raises(ValueError, match="power of two"):
+        TenantPolicy(classes=(PriorityClass("a", 0, prefill_chunk_cap=24),))
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec(weight=0.0)
+    with pytest.raises(ValueError, match="rate"):
+        TenantSpec(rate=-1.0)
+    with pytest.raises(ValueError, match="unknown priority"):
+        TenantPolicy().class_for("platinum")
+    with pytest.raises(ValueError, match="unknown default priority"):
+        TenantPolicy(tenants={"a": TenantSpec(default_priority="gold")})

@@ -1,0 +1,98 @@
+"""Minimal CLI client for the HTTP serving front door (PR 8).
+
+Streams one generation from a running ``repro.launch.http_serve`` server,
+printing tokens as SSE events arrive and the terminal usage line at the
+end — or hits the health/stats endpoints.  Stdlib only (the asyncio
+protocol helpers live in ``repro.serve.http``).
+
+Usage:
+    PYTHONPATH=src python tools/serve_client.py --port 8777 \
+        --prompt 1,2,3 --max-new-tokens 16 --tenant acme
+    PYTHONPATH=src python tools/serve_client.py --port 8777 --stats
+    PYTHONPATH=src python tools/serve_client.py --port 8777 --health
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+
+sys.path.insert(0, "src")  # runs from the repo root, like tools/check_links
+
+from repro.serve.http import http_get, open_generate, read_sse_event  # noqa: E402
+
+
+async def _stream(args) -> int:
+    payload = {
+        "prompt": [int(t) for t in args.prompt.split(",")],
+        "max_new_tokens": args.max_new_tokens,
+        "stream": True,
+    }
+    if args.tenant:
+        payload["tenant"] = args.tenant
+    if args.priority:
+        payload["priority"] = args.priority
+    reader, writer, status, headers = await open_generate(
+        args.host, args.port, payload)
+    if status != 200:
+        n = int(headers.get("content-length", "0") or 0)
+        body = (await reader.readexactly(n)).decode() if n else ""
+        retry = headers.get("retry-after")
+        print(f"HTTP {status}{f' (Retry-After: {retry}s)' if retry else ''}"
+              f" {body}", file=sys.stderr)
+        return 1
+    try:
+        while True:
+            ev = await read_sse_event(reader)
+            if ev is None:
+                print("\nstream ended without a terminal event",
+                      file=sys.stderr)
+                return 1
+            kind = ev.get("event")
+            if kind == "token":
+                print(ev["data"]["token"], end=" ", flush=True)
+            elif kind == "done":
+                d = ev["data"]
+                print(f"\n-- {d['finish_reason']}: "
+                      f"{d['usage']['completion_tokens']} tokens "
+                      f"(prompt {d['usage']['prompt_tokens']}, "
+                      f"ttft {d['ttft_s']:.3f}s, total {d['latency_s']:.3f}s)")
+                return 0
+            elif kind == "error":
+                print(f"\nserver error: {ev['data']}", file=sys.stderr)
+                return 1
+    finally:
+        writer.close()
+
+
+async def _get(args, path: str) -> int:
+    out = await http_get(args.host, args.port, path)
+    print(json.dumps(out["body"], indent=2, sort_keys=True))
+    return 0 if out["status"] == 200 else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--prompt", default="1,2,3",
+                    help="comma-separated token ids")
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--tenant", default=None)
+    ap.add_argument("--priority", default=None,
+                    help="interactive | standard | batch")
+    ap.add_argument("--health", action="store_true", help="GET /healthz")
+    ap.add_argument("--stats", action="store_true", help="GET /v1/stats")
+    args = ap.parse_args()
+    if args.health:
+        code = asyncio.run(_get(args, "/healthz"))
+    elif args.stats:
+        code = asyncio.run(_get(args, "/v1/stats"))
+    else:
+        code = asyncio.run(_stream(args))
+    raise SystemExit(code)
+
+
+if __name__ == "__main__":
+    main()
