@@ -6,7 +6,7 @@ Usage (what .github/workflows/ci.yml runs):
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
     BENCH_REPEATS=1 python benchmarks/run.py \
         --only serve_decode,serve_continuous,serve_paged,serve_prefill,\
-serve_spec,serve_robust,serve_http,serve_energy
+serve_spec,serve_robust,serve_http,serve_slo,serve_energy
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
@@ -73,6 +73,11 @@ RATIO_METRICS = {
     # acceptance criterion); lands through the warn-and-skip-on-new-section
     # path
     "serve_http.overload_goodput_ratio": 0.8,
+    # SLO-feedback overload control must buy interactive latency with
+    # batch admission, not throughput: controlled goodput >= 0.9x
+    # uncontrolled on the same saturating workload (ISSUE 9 acceptance
+    # criterion); lands through the warn-and-skip-on-new-section path
+    "serve_slo.goodput_ratio": 0.9,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
@@ -91,6 +96,8 @@ ABS_METRICS = [
     "serve_energy.photonic.tok_per_s_per_w",
     "serve_http.closed.goodput_tok_s",
     "serve_http.overload.goodput_tok_s",
+    "serve_slo.controlled.goodput_tok_s",
+    "serve_slo.uncontrolled.goodput_tok_s",
 ]
 SPEEDUP_FLOOR_METRIC = "serve_continuous.speedup_tok_s"
 # hard floor, no tolerance: batched admission must cut cold TTFT p50 by
@@ -134,6 +141,20 @@ AUTOTUNE_METRIC, AUTOTUNE_FLOOR = "serve_energy.autotune.pick_ratio", 0.9
 HTTP_TTFT_METRIC = "serve_http.closed.ttft_p99_s"
 HTTP_TTFT_BOUND_METRIC = "serve_http.ttft_p99_bound_s"
 HTTP_REJECT_METRIC, HTTP_REJECT_FLOOR = "serve_http.overload.rejected", 1
+# SLO overload control (ISSUE 9) hard checks, new run only, all same-box
+# ratios against the bench's calibrated deadline: the controlled run's
+# interactive TTFT p99 must land under the deadline the uncontrolled run
+# misses, the controlled/uncontrolled p99 ratio is LOWER-is-better and
+# must stay <= 0.8, and the controller must have actually disrupted batch
+# (>= 1 shed or batch-class preemption) or the comparison measured
+# nothing
+SLO_ON_P99_METRIC = "serve_slo.controlled.interactive_p99_s"
+SLO_OFF_P99_METRIC = "serve_slo.uncontrolled.interactive_p99_s"
+SLO_DEADLINE_METRIC = "serve_slo.interactive_deadline_s"
+SLO_P99_RATIO_METRIC, SLO_P99_RATIO_BOUND = (
+    "serve_slo.interactive_p99_ratio", 0.8)
+SLO_DISRUPT_METRIC, SLO_DISRUPT_FLOOR = (
+    "serve_slo.controlled.batch_disruptions", 1)
 
 
 def _lookup(data: dict, path: str):
@@ -348,6 +369,58 @@ def main() -> int:
         )
     else:
         print(f"overload rejections: {rej} >= {HTTP_REJECT_FLOOR}")
+
+    on_p99 = _lookup(new, SLO_ON_P99_METRIC)
+    off_p99 = _lookup(new, SLO_OFF_P99_METRIC)
+    slo_deadline = _lookup(new, SLO_DEADLINE_METRIC)
+    if on_p99 is None or off_p99 is None or slo_deadline is None:
+        failures.append(
+            f"{SLO_ON_P99_METRIC} / {SLO_OFF_P99_METRIC} / "
+            f"{SLO_DEADLINE_METRIC}: missing from new run"
+        )
+    else:
+        if on_p99 > slo_deadline:
+            failures.append(
+                f"{SLO_ON_P99_METRIC}: {on_p99:.2f}s > deadline "
+                f"{slo_deadline:.2f}s — the controller no longer protects "
+                "interactive TTFT under saturation"
+            )
+        else:
+            print(f"slo controlled p99: {on_p99:.2f}s <= deadline "
+                  f"{slo_deadline:.2f}s")
+        if off_p99 <= slo_deadline:
+            failures.append(
+                f"{SLO_OFF_P99_METRIC}: {off_p99:.2f}s <= deadline "
+                f"{slo_deadline:.2f}s — the uncontrolled run never missed, "
+                "so the comparison measured nothing"
+            )
+        else:
+            print(f"slo uncontrolled p99: {off_p99:.2f}s > deadline "
+                  f"{slo_deadline:.2f}s (misses, as constructed)")
+
+    p99_ratio = _lookup(new, SLO_P99_RATIO_METRIC)
+    if p99_ratio is None:
+        failures.append(f"{SLO_P99_RATIO_METRIC}: missing from new run")
+    elif p99_ratio > SLO_P99_RATIO_BOUND:  # lower is better
+        failures.append(
+            f"{SLO_P99_RATIO_METRIC}: {p99_ratio:.2f}x > bound "
+            f"{SLO_P99_RATIO_BOUND}x — overload control no longer cuts "
+            "interactive p99 vs the uncontrolled baseline"
+        )
+    else:
+        print(f"slo interactive p99 ratio: {p99_ratio:.2f}x <= "
+              f"{SLO_P99_RATIO_BOUND}x (lower is better)")
+
+    disrupt = _lookup(new, SLO_DISRUPT_METRIC)
+    if disrupt is None:
+        failures.append(f"{SLO_DISRUPT_METRIC}: missing from new run")
+    elif disrupt < SLO_DISRUPT_FLOOR:
+        failures.append(
+            f"{SLO_DISRUPT_METRIC}: {disrupt} — the controller never shed "
+            "nor preempted batch, so the controlled run measured nothing"
+        )
+    else:
+        print(f"slo batch disruptions: {disrupt} >= {SLO_DISRUPT_FLOOR}")
 
     spec_traces = _lookup(new, SPEC_TRACE_METRIC)
     spec_bound = _lookup(new, SPEC_TRACE_BOUND_METRIC)

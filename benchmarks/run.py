@@ -9,14 +9,16 @@ run with stdout suppressed so tables print once.
 
 ``serve_decode``, ``serve_continuous``, ``serve_paged``, ``serve_prefill``,
 ``serve_spec``, ``serve_robust``, ``serve_http`` (in ``serve_http.py``),
-and ``serve_energy`` additionally record
+``serve_slo`` (in ``serve_slo.py``), and ``serve_energy`` additionally record
 into machine-readable ``BENCH_serve.json`` (each under its own section —
 compiled-vs-python decode tok/s per batch size, continuous-vs-static
 aggregate tok/s + p50/p95 request latency, paged-vs-dense KV tok/s + peak
 cache bytes, batched/chunked-vs-per-request admission TTFT + prefill trace
 counts, speculative-vs-plain decode tok/s + mean accepted length,
 overcommitted-vs-uncontended goodput under preemption, closed-loop vs
-overload goodput + client-observed TTFT through the HTTP front door, and
+overload goodput + client-observed TTFT through the HTTP front door,
+SLO-controlled vs uncontrolled interactive TTFT + goodput under
+saturation, and
 energy-per-token photonic-vs-electronic + the autotune sweep gate) so
 the serving-perf trajectory
 is tracked across PRs; CI's perf gate (``benchmarks/perf_gate.py``) compares
@@ -1188,7 +1190,9 @@ def roofline_table(path: str = "results/dryrun3.jsonl"):
 
 
 def main() -> None:
-    from serve_http import serve_http  # sibling module (HTTP front-door bench)
+    # sibling modules (HTTP front-door + overload-control benches)
+    from serve_http import serve_http
+    from serve_slo import serve_slo
 
     benches = [
         ("table1_table3", table1_table3, lambda o: f"acc_sonic={o['acc_sonic']:.3f}"),
@@ -1213,6 +1217,8 @@ def main() -> None:
          lambda o: f"goodput_ratio={o['goodput_ratio']:.2f}x"),
         ("serve_http", serve_http,
          lambda o: f"overload_ratio={o['overload_goodput_ratio']:.2f}x"),
+        ("serve_slo", serve_slo,
+         lambda o: f"int_p99_ratio={o['interactive_p99_ratio']:.2f}x"),
         ("serve_energy", serve_energy,
          lambda o: (f"energy_ratio="
                     f"{o['energy_ratio_electronic_over_photonic']:.2f}x")),
@@ -1220,7 +1226,7 @@ def main() -> None:
     ]
     self_timed = {"serve_decode", "serve_continuous", "serve_paged",
                   "serve_prefill", "serve_spec", "serve_robust",
-                  "serve_http", "serve_energy"}
+                  "serve_http", "serve_slo", "serve_energy"}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench names (default: all)")

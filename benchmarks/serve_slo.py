@@ -1,0 +1,275 @@
+"""serve_slo bench: SLO-feedback overload control ON vs OFF (PR 9).
+
+Runs the same seeded saturating workload twice through the HTTP front
+door — a batch backlog on the serve_robust contended pool (20 blocks,
+overcommit 2.0, so preemption must carry the load) plus a closed-loop
+interactive client riding on top — once **uncontrolled** (``policy=None``:
+FIFO admission, progress-only preemption, the pre-policy serving path)
+and once **controlled** (``TenantPolicy`` with priority classes and the
+``SloConfig`` brownout ladder installed).
+
+The interactive TTFT deadline is CALIBRATED from the uncontrolled run
+(half its observed interactive p99), so the bench transfers across CPU
+generations: the uncontrolled run misses that deadline by construction
+and the controlled run must land under it with real margin — via strict
+priority admission, batch-first preemption on pool exhaustion, and (when
+the ladder rises) brownout sheds, which the batch clients retry per the
+server's ``Retry-After``.  Completed outputs in BOTH modes are asserted
+bit-identical to an offline uncontended drain before anything is
+recorded (greedy outputs are prompt-determined — overload control only
+moves WHO runs WHEN).
+
+Gated in ``perf_gate.py``: ``goodput_ratio`` (controlled / uncontrolled
+total served tok/s — protecting interactive must not collapse batch
+throughput) through the warn-and-skip-on-new-section ratio path, plus
+hard checks on the new run only: controlled interactive p99 under the
+recorded deadline, uncontrolled p99 over it, ``interactive_p99_ratio``
+(controlled/uncontrolled, lower is better) <= 0.8, and >= 1 batch
+disruption (shed or batch-class preemption — otherwise the controller
+never acted and the comparison measured nothing).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+HOST = "127.0.0.1"
+
+# the serve_robust contended pool (20 blocks at overcommit 2.0) with the
+# decode lengths fattened so the box actually QUEUES: the first six
+# budgets sum to 38 blocks (under the 40-block commitment cap), so all
+# six slots fill with multi-segment runners at t=0, the other six batch
+# requests wait in a deep FIFO queue, and the residents' eventual 38-block
+# working set against the 20-block pool keeps mid-flight preemption live.
+# (The serve_robust mix itself is too short-tailed here: its 4-16-token
+# requests retire within a segment or two, slots free before the
+# interactive client even arrives, and the uncontrolled p99 collapses.)
+N_SLOTS, SEG_LEN, MAX_LEN, BLOCK_LEN = 6, 16, 192, 16
+N_BLOCKS, OVERCOMMIT = 20, 2.0
+BATCH_LENS = [4, 16, 8, 12, 4, 16, 6, 10, 14, 8, 4, 12]
+BATCH_NEWS = [144, 60, 76, 44, 120, 60, 36, 144, 44, 76, 36, 108]
+# a late batch wave arrives while the box is already saturated — the
+# submissions the brownout ladder can shed (the backlog is already queued)
+LATE_LENS = [6, 10, 8, 12]
+LATE_NEWS = [24, 32, 24, 16]
+INT_LENS = [5, 7, 6, 5, 7, 6]
+INT_NEWS = [8] * len(INT_LENS)
+MAX_429_RETRIES = 60
+
+
+def _payload(prompt, max_new, tenant):
+    return {"prompt": [int(t) for t in prompt], "max_new_tokens": max_new,
+            "tenant": tenant}
+
+
+async def _with_fd(sched, cfg, coro_fn):
+    from repro.serve.http import FrontDoor, HttpConfig  # noqa: F401
+
+    fd = FrontDoor(sched, cfg)
+    await fd.start()
+    try:
+        return await coro_fn(fd)
+    finally:
+        await fd.stop()
+
+
+def serve_slo():
+    from repro.models.registry import get_arch
+    from repro.serve import (ContinuousScheduler, PriorityClass, ServeConfig,
+                             ServeEngine, SloConfig, TenantPolicy, TenantSpec)
+    from repro.serve.http import HttpConfig, generate
+    from repro.sharding.mesh import MeshPlan
+    # the harness owns repeat count + section-splicing JSON writer; the
+    # import is deferred so `run` (fully loaded by the time any bench
+    # runs) and this module never import-cycle
+    from run import BENCH_REPEATS, _merge_bench_json
+
+    arch = get_arch("tinyllama-1.1b", reduced=True)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    engine = ServeEngine(arch, params, MeshPlan(),
+                         ServeConfig(max_len=MAX_LEN, kv_layout="paged",
+                                     block_len=BLOCK_LEN, temperature=0.0))
+    rng = np.random.RandomState(0)
+    batch_prompts = [rng.randint(0, 1000, (n,)).astype(np.int32)
+                     for n in BATCH_LENS]
+    late_prompts = [rng.randint(0, 1000, (n,)).astype(np.int32)
+                    for n in LATE_LENS]
+    int_prompts = [rng.randint(0, 1000, (n,)).astype(np.int32)
+                   for n in INT_LENS]
+
+    def mk_sched(deadline_s=None):
+        """deadline_s=None -> uncontrolled (no policy); else the PR 9
+        controller: priority classes + the SLO brownout ladder."""
+        policy = None
+        if deadline_s is not None:
+            classes = (
+                PriorityClass("interactive", level=2,
+                              ttft_deadline_s=deadline_s),
+                PriorityClass("standard", level=1),
+                PriorityClass("batch", level=0),
+            )
+            policy = TenantPolicy(
+                tenants={"app": TenantSpec(default_priority="interactive"),
+                         "crawl": TenantSpec(default_priority="batch")},
+                classes=classes,
+                slo=SloConfig(min_obs=2),
+            )
+        return ContinuousScheduler(
+            engine, n_slots=N_SLOTS, segment_len=SEG_LEN,
+            segment_mode="while", n_blocks=N_BLOCKS, overcommit=OVERCOMMIT,
+            policy=policy)
+
+    # -- offline oracle (also the compile warmup): greedy outputs are
+    # prompt-determined, so one uncontended drain covers both modes
+    oracle = ContinuousScheduler(engine, n_slots=N_SLOTS, segment_len=SEG_LEN,
+                                 segment_mode="while", n_blocks=49)
+    all_prompts = batch_prompts + late_prompts + int_prompts
+    all_news = BATCH_NEWS + LATE_NEWS + INT_NEWS
+    handles = [oracle.submit(p, n) for p, n in zip(all_prompts, all_news)]
+    oracle.run()
+    want = [list(h.tokens) for h in handles]
+    want_batch = want[:len(BATCH_LENS)]
+    want_late = want[len(BATCH_LENS):len(BATCH_LENS) + len(LATE_LENS)]
+    want_int = want[len(BATCH_LENS) + len(LATE_LENS):]
+
+    async def run_mode(fd):
+        """The seeded saturating mix: batch backlog all at once, a late
+        batch wave while saturated (retrying 429s per Retry-After), and a
+        closed-loop interactive client.  Returns wall + per-group outs +
+        the client-observed shed count."""
+        sheds = 0
+
+        async def batch_one(payload):
+            nonlocal sheds
+            for _ in range(MAX_429_RETRIES):
+                out = await generate(HOST, fd.port, payload)
+                if out["status"] != 429:
+                    return out
+                sheds += 1 if "brownout_level" in out["body"] else 0
+                await asyncio.sleep(
+                    min(float(out["body"].get("retry_after_s", 0.2)), 0.25))
+            raise RuntimeError("batch submission never admitted after "
+                               f"{MAX_429_RETRIES} retries")
+
+        async def late_one(i, payload):
+            await asyncio.sleep(0.2 + 0.15 * i)
+            return await batch_one(payload)
+
+        async def interactive_client():
+            await asyncio.sleep(0.05)
+            outs = []
+            for p, n in zip(int_prompts, INT_NEWS):
+                outs.append(await generate(
+                    HOST, fd.port, _payload(p, n, "app")))
+            return outs
+
+        t0 = time.perf_counter()
+        batch_task = asyncio.gather(*[
+            batch_one(_payload(p, n, "crawl"))
+            for p, n in zip(batch_prompts, BATCH_NEWS)])
+        late_task = asyncio.gather(*[
+            late_one(i, _payload(p, n, "crawl"))
+            for i, (p, n) in enumerate(zip(late_prompts, LATE_NEWS))])
+        int_task = asyncio.ensure_future(interactive_client())
+        batch_outs, late_outs, int_outs = await asyncio.gather(
+            batch_task, late_task, int_task)
+        return (time.perf_counter() - t0, batch_outs, late_outs, int_outs,
+                sheds)
+
+    def check_and_score(rep, label):
+        wall, batch_outs, late_outs, int_outs, sheds = rep
+        for outs, wants in ((batch_outs, want_batch), (late_outs, want_late),
+                            (int_outs, want_int)):
+            for o, w in zip(outs, wants):
+                assert o["status"] == 200, (label, o["status"], o["body"])
+                assert o["body"]["finish_reason"] == "length", (
+                    label, o["body"]["finish_reason"])
+                assert o["body"]["tokens"] == w, (
+                    f"{label}: outputs diverged from the offline drain")
+        toks = sum(len(o["body"]["tokens"])
+                   for o in batch_outs + late_outs + int_outs)
+        ttfts = sorted(o["ttft_s"] for o in int_outs)
+        return {"wall_s": wall, "tokens": toks, "goodput_tok_s": toks / wall,
+                "interactive_p50_s": float(np.percentile(ttfts, 50)),
+                "interactive_p99_s": float(np.percentile(ttfts, 99)),
+                "sheds_429": sheds}
+
+    cfg = HttpConfig(max_pending=64)
+    reps = max(BENCH_REPEATS, 2)
+
+    # -- uncontrolled first: its interactive p99 calibrates the deadline
+    off_runs = []
+    for _ in range(reps):
+        sched = mk_sched()
+        rep = asyncio.run(_with_fd(sched, cfg, run_mode))
+        off_runs.append((check_and_score(rep, "uncontrolled"), sched))
+    off, off_sched = min(off_runs, key=lambda r: r[0]["wall_s"])
+    deadline = 0.5 * off["interactive_p99_s"]
+    assert off["interactive_p99_s"] > 0.05, (
+        "uncontrolled interactive p99 implausibly small — the backlog "
+        "never contended and the deadline calibration is meaningless")
+
+    # -- controlled: same workload against the calibrated deadline
+    on_runs = []
+    for _ in range(reps):
+        sched = mk_sched(deadline_s=deadline)
+        rep = asyncio.run(_with_fd(sched, cfg, run_mode))
+        on_runs.append((check_and_score(rep, "controlled"), sched))
+    on, on_sched = min(on_runs, key=lambda r: r[0]["wall_s"])
+
+    by_class = dict(on_sched.stats.get("preemptions_by_class", {}))
+    slo = on_sched.policy.slo_snapshot()
+    shed_total = sum(slo["classes"][c]["shed"] for c in slo["classes"])
+    on["preemptions_by_class"] = by_class
+    on["sheds_server"] = shed_total
+    on["batch_disruptions"] = shed_total + by_class.get("batch", 0)
+    on["brownout_level_final"] = slo["brownout_level"]
+    on["level_changes"] = slo["level_changes"]
+    off["preemptions"] = off_sched.stats["preemptions"]
+
+    assert on["batch_disruptions"] >= 1, (
+        "the controller never shed nor preempted a batch request — the "
+        "pool/backlog no longer saturates the box")
+    assert on["interactive_p99_s"] <= deadline, (
+        f"controlled interactive p99 {on['interactive_p99_s']:.2f}s missed "
+        f"the calibrated deadline {deadline:.2f}s")
+
+    out = {
+        "arch": "tinyllama-1.1b (reduced)",
+        "workload": {
+            "batch_prompt_lens": BATCH_LENS, "batch_new_tokens": BATCH_NEWS,
+            "late_prompt_lens": LATE_LENS, "late_new_tokens": LATE_NEWS,
+            "interactive_prompt_lens": INT_LENS,
+            "interactive_new_tokens": INT_NEWS,
+            "n_slots": N_SLOTS, "segment_len": SEG_LEN,
+            "block_len": BLOCK_LEN, "n_blocks": N_BLOCKS,
+            "overcommit": OVERCOMMIT,
+        },
+        "interactive_deadline_s": deadline,
+        "uncontrolled": off,
+        "controlled": on,
+        "interactive_p99_ratio": (on["interactive_p99_s"]
+                                  / off["interactive_p99_s"]),
+        "goodput_ratio": on["goodput_tok_s"] / off["goodput_tok_s"],
+    }
+
+    print("\n== serve_slo: overload control ON vs OFF through the front door ==")
+    print(f"{'mode':>13s} {'tok/s':>8s} {'int p50':>8s} {'int p99':>8s} "
+          f"{'sheds':>6s} {'preempt':>8s}")
+    print(f"{'uncontrolled':>13s} {off['goodput_tok_s']:8.1f} "
+          f"{off['interactive_p50_s']:8.2f} {off['interactive_p99_s']:8.2f} "
+          f"{0:6d} {off['preemptions']:8d}")
+    print(f"{'controlled':>13s} {on['goodput_tok_s']:8.1f} "
+          f"{on['interactive_p50_s']:8.2f} {on['interactive_p99_s']:8.2f} "
+          f"{on['sheds_server']:6d} {by_class.get('batch', 0):8d}")
+    print(f"deadline {deadline:.2f}s (calibrated = 0.5x uncontrolled p99): "
+          f"controlled p99 {'meets' if on['interactive_p99_s'] <= deadline else 'MISSES'}, "
+          f"uncontrolled p99 {'misses' if off['interactive_p99_s'] > deadline else 'MEETS'}")
+    print(f"interactive p99 ratio {out['interactive_p99_ratio']:.2f}x "
+          f"(gate <= 0.8), goodput ratio {out['goodput_ratio']:.2f}x "
+          f"(gate >= 0.9), batch disruptions {on['batch_disruptions']}")
+    _merge_bench_json("serve_slo", out)
+    return out

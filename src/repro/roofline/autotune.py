@@ -265,3 +265,89 @@ def autotune(
              for kc in cands]
     ranked = sorted(preds, key=lambda p: p.tok_s, reverse=True)
     return AutotuneResult(best=ranked[0].knobs, ranked=ranked)
+
+
+class DrainPredictor:
+    """Queue-drain time prediction for the serving front door (PR 9).
+
+    ``predict`` speaks model units (its device times are the ``hw``
+    target's, not the serving box's), so the predictor calibrates the
+    model→wall scale online: ``observe`` folds each finished request's
+    measured wall time into an EWMA of measured/modelled per-request time,
+    and ``drain_s`` then prices an arbitrary queue composition through ONE
+    ``predict`` call and scales it to wall seconds — the ``Retry-After``
+    a 429 carries tracks what is actually queued instead of a scalar
+    request-rate EWMA.
+
+    Single-request model times are memoized on power-of-two shape buckets,
+    so a steady-state ``observe`` costs one dict lookup; ``drain_s``
+    returns ``None`` until the first observation lands (callers fall back
+    to their legacy heuristic).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        knobs: KnobConfig,
+        n_slots: int,
+        max_len: int,
+        paged: bool = False,
+        alpha: float = 0.2,
+        hw: HWTarget = TPU_V5E,
+    ):
+        assert 0.0 < alpha <= 1.0, alpha
+        self.cfg = cfg
+        self.knobs = knobs
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.paged = paged
+        self.alpha = float(alpha)
+        self.hw = hw
+        self.scale: float | None = None  # model s -> wall s (None = cold)
+        self.n_obs = 0
+        self._single: dict[tuple[int, int], float] = {}
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return 1 << max(0, int(n) - 1).bit_length()
+
+    def _model_s(self, plens, news) -> float:
+        w = WorkloadSpec(tuple(int(p) for p in plens),
+                         tuple(int(n) for n in news),
+                         n_slots=self.n_slots, max_len=self.max_len)
+        return predict(self.knobs, w, self.cfg, hw=self.hw,
+                       paged=self.paged).time_s
+
+    def _single_model_s(self, plen: int, nnew: int) -> float:
+        key = (self._bucket(plen), self._bucket(nnew))
+        t = self._single.get(key)
+        if t is None:
+            t = self._single[key] = self._model_s([key[0]], [key[1]])
+        return t
+
+    @property
+    def calibrated(self) -> bool:
+        return self.scale is not None
+
+    def observe(self, plen: int, nnew: int, measured_s: float) -> None:
+        """Fold one finished request's measured wall time into the
+        model→wall scale.  The measured wall includes queueing and slot
+        sharing, so the EWMA absorbs the serving box's average concurrency
+        — exactly the bias a drain estimate wants."""
+        if measured_s <= 0 or nnew < 1:
+            return
+        model = self._single_model_s(plen, nnew)
+        if model <= 0:
+            return
+        ratio = measured_s / model
+        self.scale = (ratio if self.scale is None
+                      else (1 - self.alpha) * self.scale + self.alpha * ratio)
+        self.n_obs += 1
+
+    def drain_s(self, plens, news) -> float | None:
+        """Predicted wall seconds to drain the given composition (see
+        ``ContinuousScheduler.queue_composition``); ``None`` while
+        uncalibrated or when nothing is queued."""
+        if self.scale is None or not plens:
+            return None
+        return self._model_s(plens, news) * self.scale

@@ -1,7 +1,8 @@
 from repro.serve.chaos import ChaosConfig
 from repro.serve.engine import ServeEngine, ServeConfig, SpecConfig
 from repro.serve.http import FrontDoor, HttpConfig
-from repro.serve.policy import (PriorityClass, RateLimited, TenantPolicy,
+from repro.serve.policy import (Overloaded, PriorityClass, RateLimited,
+                                SloConfig, SloMonitor, TenantPolicy,
                                 TenantSpec)
 from repro.serve.request import Request, SubmitRequest
 from repro.serve.sampling import sample_token, spec_accept
@@ -15,12 +16,15 @@ __all__ = [
     "ContinuousScheduler",
     "FrontDoor",
     "HttpConfig",
+    "Overloaded",
     "PhaseRecord",
     "PriorityClass",
     "RateLimited",
     "Request",
     "ServeConfig",
     "ServeEngine",
+    "SloConfig",
+    "SloMonitor",
     "SpecConfig",
     "SubmitRequest",
     "TenantPolicy",

@@ -24,8 +24,10 @@ Endpoints:
 ``GET /healthz``
     Liveness + queue depths.
 ``GET /v1/stats``
-    Scheduler stats, per-tenant policy counters, and (when tracing) the
-    per-tenant priced tok/s + J/token report.
+    Scheduler stats, per-tenant policy counters, the SLO controller's
+    state when one is configured (per-class observed TTFT p50/p99,
+    brownout level, shed + preemption counters per class), and (when
+    tracing) the per-tenant priced tok/s + J/token report.
 
 Threading model: the scheduler (JAX programs, host bookkeeping) runs in ONE
 dedicated worker thread (:class:`SchedulerWorker`); the event loop never
@@ -69,7 +71,7 @@ import threading
 import time
 
 from repro.serve.request import Request, SubmitRequest
-from repro.serve.policy import RateLimited
+from repro.serve.policy import Overloaded, RateLimited
 from repro.utils.logging import get_logger
 
 log = get_logger("serve.http")
@@ -127,6 +129,17 @@ class SchedulerWorker:
         self.error: BaseException | None = None
         # smoothed per-retired-request service time, for Retry-After hints
         self._req_s = 0.25
+        # analytic drain predictor (PR 9): roofline model time over the live
+        # queue composition, scaled by a measured/model calibration EWMA.
+        # None for schedulers that don't expose one (the JAX-free test stub)
+        # or until the first finished request calibrates the scale; the EWMA
+        # formula above is the fallback either way.
+        try:
+            self._predictor = sched.drain_predictor()
+        except AttributeError:
+            self._predictor = None
+        self._drain_s: float | None = None
+        self._drain_sig: tuple | None = None
 
     # -- event-loop side ---------------------------------------------------
 
@@ -143,8 +156,14 @@ class SchedulerWorker:
         return len(self._inbox) + len(self.sched.queue)
 
     def retry_after(self, pending: int, floor: float) -> float:
-        """Backpressure hint: the queue's expected drain time through
-        ``n_slots`` servers at the smoothed per-request service time."""
+        """Backpressure hint.  Preferred source: the calibrated analytic
+        drain prediction over the scheduler's current queue composition
+        (queued + resident work through the roofline cost model, scaled by
+        the measured/model EWMA).  Fallback before calibration: ``pending``
+        requests through ``n_slots`` servers at the smoothed per-request
+        service time."""
+        if self._drain_s is not None:
+            return round(max(floor, self._drain_s), 2)
         n = max(getattr(self.sched, "n_slots", 1), 1)
         return round(max(floor, pending * self._req_s / n), 2)
 
@@ -197,10 +216,30 @@ class SchedulerWorker:
         live = []
         for req, mailbox in self._watch:
             if req.terminal:
+                if (self._predictor is not None and req.done
+                        and req.latency is not None and req.tokens):
+                    self._predictor.observe(req.prompt_len, len(req.tokens),
+                                            req.latency)
                 self._post(mailbox, ("done",))
             else:
                 live.append((req, mailbox))
         self._watch = live
+
+    def _update_drain(self) -> None:
+        """Refresh the cached drain prediction when the scheduler's queue
+        composition changed (signature = count + token sums, cheap to
+        compare; the model evaluation behind it is the expensive part)."""
+        if self._predictor is None or not self._predictor.calibrated:
+            return
+        comp = getattr(self.sched, "queue_composition", None)
+        if comp is None:
+            return
+        plens, news = comp()
+        sig = (len(plens), sum(plens), sum(news))
+        if sig == self._drain_sig:
+            return
+        self._drain_sig = sig
+        self._drain_s = self._predictor.drain_s(plens, news)
 
     def _run(self) -> None:
         try:
@@ -215,6 +254,7 @@ class SchedulerWorker:
                         per = (time.perf_counter() - t0) / retired
                         self._req_s = 0.8 * self._req_s + 0.2 * per
                     self._pump_terminals()
+                    self._update_drain()
                 elif self._stop.is_set():
                     with self._lock:
                         if not self._inbox:
@@ -254,6 +294,7 @@ class FrontDoor:
             "accepted": 0,
             "rejected_backpressure": 0,
             "rejected_rate": 0,
+            "rejected_shed": 0,
             "bad_requests": 0,
             "disconnects": 0,
             "completed": 0,
@@ -368,6 +409,11 @@ class FrontDoor:
         policy = getattr(self.sched, "policy", None)
         if policy is not None:
             out["tenants"] = policy.snapshot()
+            slo = policy.slo_snapshot()
+            if slo is not None:
+                slo["preemptions_by_class"] = dict(
+                    self.sched.stats.get("preemptions_by_class", {}))
+                out["slo"] = slo
         trace = getattr(self.sched, "trace", None)
         if trace is not None:
             from repro.serve.trace import tenant_report, trace_energy
@@ -455,12 +501,20 @@ class FrontDoor:
         try:
             req = await asyncio.wrap_future(fut)
         except RateLimited as e:
-            self.stats["rejected_rate"] += 1
-            self._respond(writer, 429,
-                          _dumps({"error": str(e),
-                                  "retry_after_s": e.retry_after_s}),
-                          extra={"Retry-After":
-                                 str(max(1, round(e.retry_after_s)))})
+            # brownout sheds ride the RateLimited surface (Overloaded is a
+            # subclass) but are counted apart and carry a Retry-After from
+            # the worker's drain prediction when that beats the shed hint
+            shed = isinstance(e, Overloaded)
+            self.stats["rejected_shed" if shed else "rejected_rate"] += 1
+            retry = e.retry_after_s
+            if shed:
+                retry = max(retry, self.worker.retry_after(
+                    self.worker.pending, self.cfg.retry_after_floor_s))
+            payload = {"error": str(e), "retry_after_s": retry}
+            if shed:
+                payload["brownout_level"] = e.level
+            self._respond(writer, 429, _dumps(payload),
+                          extra={"Retry-After": str(max(1, round(retry)))})
             return
         except ValueError as e:
             self.stats["bad_requests"] += 1

@@ -24,6 +24,12 @@ of slots, blocks, and segments.  Three mechanisms compose:
   sustained requests/s bound enforced at ``submit`` — an over-rate
   submission raises :class:`RateLimited` carrying the retry-after hint the
   HTTP front door surfaces as ``429`` + ``Retry-After``.
+* **SLO feedback** (``SloConfig``/``SloMonitor``, PR 9): a windowed monitor
+  of per-class observed TTFT drives the brownout ladder — shed victim-class
+  submissions (:class:`Overloaded`), clamp victim prefill knobs, close
+  victim admission — with hysteresis.  DRR is elastic: idle tenants' unused
+  share is redistributed pro-rata to the backlogged set each round.
+  See ``docs/serving.md`` §Overload control.
 
 The select/commit split keeps the scheduler's deferral semantics intact:
 ``select(queue)`` is a PURE peek (no deficit/cursor mutation) so a paged
@@ -40,6 +46,8 @@ thread, and the offline launcher is single-threaded, so no lock is needed.
 from __future__ import annotations
 
 import dataclasses
+import random
+from collections import deque
 from typing import Iterable, Sequence
 
 from repro.serve.request import Request
@@ -55,6 +63,25 @@ class RateLimited(Exception):
             f"tenant '{tenant}' over rate limit; retry after "
             f"{self.retry_after_s:.2f}s"
         )
+
+
+class Overloaded(RateLimited):
+    """Shed by the brownout controller: the victim class is turned away
+    while the target class's observed TTFT is over its deadline.  Subclasses
+    :class:`RateLimited` so every 429 path (front door, launcher) handles it
+    unchanged; carries the brownout level for observability."""
+
+    def __init__(self, tenant: str, retry_after_s: float, priority: str,
+                 level: int):
+        self.priority = priority
+        self.level = level
+        Exception.__init__(
+            self,
+            f"'{priority}' submission shed at brownout level {level}; "
+            f"retry after {float(retry_after_s):.2f}s"
+        )
+        self.tenant = tenant
+        self.retry_after_s = float(retry_after_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +107,191 @@ DEFAULT_CLASSES = (
     PriorityClass("standard", level=1),
     PriorityClass("batch", level=0),
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class SloConfig:
+    """Closed-loop overload control (the brownout ladder).
+
+    The controller watches the ``target_class``'s observed TTFT quantile
+    (completed requests + currently-waiting ages, so it reacts before the
+    damage completes) against that class's ``ttft_deadline_s``.  When the
+    quantile crosses ``enter[i] × deadline`` the ladder steps to level
+    ``i+1``; each level degrades every class at or below the
+    ``victim_class``'s level:
+
+        level 1   shed ``shed_frac[0]`` of victim submissions with 429s
+        level 2   + clamp victim prefill chunk cap / token budget to the
+                  scheduler's smallest prefill bucket
+        level 3   stop admitting victim submissions entirely
+
+    Hysteresis: stepping UP is immediate (possibly multiple levels);
+    stepping DOWN requires ``dwell`` consecutive updates below
+    ``exit_ratio × enter[level-1] × deadline``, one level at a time — the
+    gap between the entry and exit thresholds is what stops the controller
+    flapping at a threshold boundary."""
+
+    target_class: str = "interactive"
+    victim_class: str = "batch"
+    quantile: float = 0.9
+    window: int = 64
+    min_obs: int = 4
+    enter: tuple[float, float, float] = (0.6, 0.85, 1.1)
+    exit_ratio: float = 0.7
+    dwell: int = 4
+    shed_frac: tuple[float, float] = (0.5, 0.85)
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.quantile < 1.0:
+            raise ValueError(f"quantile must be in (0, 1): {self.quantile}")
+        if self.window < 1 or self.min_obs < 1:
+            raise ValueError("window and min_obs must be >= 1")
+        if len(self.enter) != 3 or any(
+                a >= b for a, b in zip(self.enter, self.enter[1:])):
+            raise ValueError(
+                f"enter must be 3 increasing fractions: {self.enter}")
+        if not 0.0 < self.exit_ratio < 1.0:
+            raise ValueError(f"exit_ratio must be in (0, 1): {self.exit_ratio}")
+        if self.dwell < 1:
+            raise ValueError(f"dwell must be >= 1: {self.dwell}")
+        if len(self.shed_frac) != 2 or any(
+                not 0.0 <= f <= 1.0 for f in self.shed_frac):
+            raise ValueError(
+                f"shed_frac must be 2 fractions in [0, 1]: {self.shed_frac}")
+
+
+def _quantile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank quantile of a non-empty sample (no numpy: the policy
+    layer stays stdlib-only)."""
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+class SloMonitor:
+    """Windowed per-class TTFT/latency observation + the brownout ladder.
+
+    Host-side and allocation-free on the hot path: ``observe_*`` appends to
+    a bounded deque, ``update`` runs once per segment.  Shedding draws from
+    its own seeded ``random.Random`` so a workload replays its shed
+    decisions exactly."""
+
+    def __init__(self, cfg: SloConfig, classes: dict[str, PriorityClass]):
+        for role in ("target_class", "victim_class"):
+            name = getattr(cfg, role)
+            if name not in classes:
+                raise ValueError(
+                    f"SloConfig.{role} '{name}' is not a priority class "
+                    f"(have {sorted(classes)})"
+                )
+        target = classes[cfg.target_class]
+        if target.ttft_deadline_s is None:
+            raise ValueError(
+                f"SloConfig target class '{target.name}' has no "
+                "ttft_deadline_s — the controller needs a deadline to "
+                "steer toward"
+            )
+        if classes[cfg.victim_class].level >= target.level:
+            raise ValueError(
+                f"victim class '{cfg.victim_class}' must rank below target "
+                f"'{cfg.target_class}'"
+            )
+        self.cfg = cfg
+        self.deadline = float(target.ttft_deadline_s)
+        self._level_of = {name: c.level for name, c in classes.items()}
+        self._victim_level = classes[cfg.victim_class].level
+        self.level = 0
+        self._dwell = 0
+        self._rng = random.Random(cfg.seed)
+        self._ttft: dict[str, deque] = {
+            name: deque(maxlen=cfg.window) for name in classes}
+        self._lat: dict[str, deque] = {
+            name: deque(maxlen=cfg.window) for name in classes}
+        self.shed: dict[str, int] = {}
+        self.level_changes = 0
+        self.last_quantile: float | None = None
+
+    def degrades(self, priority: str) -> bool:
+        """Whether the brownout ladder degrades this class (at or below the
+        victim class's level — never the target or anything above it)."""
+        return self._level_of[priority] <= self._victim_level
+
+    # ------------------------------------------------------- observation
+
+    def observe_ttft(self, priority: str, ttft_s: float) -> None:
+        self._ttft[priority].append(float(ttft_s))
+
+    def observe_latency(self, priority: str, latency_s: float) -> None:
+        self._lat[priority].append(float(latency_s))
+
+    def update(self, waiting_ages: Sequence[float] = ()) -> int | None:
+        """One controller step: recompute the target class's TTFT quantile
+        over completed observations + the target class's currently-waiting
+        ages, move the ladder, return the new level on a change (else
+        ``None``)."""
+        cfg = self.cfg
+        sample = list(self._ttft[cfg.target_class])
+        sample.extend(float(a) for a in waiting_ages)
+        if len(sample) < cfg.min_obs:
+            return None
+        p = self.last_quantile = _quantile(sample, cfg.quantile)
+        want = 0
+        for i, frac in enumerate(cfg.enter):
+            if p >= frac * self.deadline:
+                want = i + 1
+        old = self.level
+        if want > self.level:
+            self.level, self._dwell = want, 0  # step up immediately
+        elif (self.level
+              and p < cfg.exit_ratio * cfg.enter[self.level - 1]
+              * self.deadline):
+            self._dwell += 1
+            if self._dwell >= cfg.dwell:  # step down one level, slowly
+                self.level, self._dwell = self.level - 1, 0
+        else:
+            self._dwell = 0  # inside the hysteresis band: hold
+        if self.level != old:
+            self.level_changes += 1
+            return self.level
+        return None
+
+    # ---------------------------------------------------------- shedding
+
+    def should_shed(self, priority: str) -> bool:
+        """Seeded admission-shed decision for one submission at the current
+        brownout level (counts what it sheds)."""
+        if self.level == 0 or not self.degrades(priority):
+            return False
+        if self.level >= 3:
+            shed = True  # level 3: victim admission fully closed
+        else:
+            shed = self._rng.random() < self.cfg.shed_frac[self.level - 1]
+        if shed:
+            self.shed[priority] = self.shed.get(priority, 0) + 1
+        return shed
+
+    def snapshot(self) -> dict:
+        """Controller state for /v1/stats: ladder position, per-class
+        observed quantiles, shed counters."""
+        classes = {}
+        for name in self._ttft:
+            ttfts, lats = self._ttft[name], self._lat[name]
+            classes[name] = {
+                "observed": len(ttfts),
+                "ttft_p50_s": _quantile(ttfts, 0.50) if ttfts else None,
+                "ttft_p99_s": _quantile(ttfts, 0.99) if ttfts else None,
+                "latency_p99_s": _quantile(lats, 0.99) if lats else None,
+                "shed": self.shed.get(name, 0),
+            }
+        return {
+            "brownout_level": self.level,
+            "target_class": self.cfg.target_class,
+            "victim_class": self.cfg.victim_class,
+            "ttft_deadline_s": self.deadline,
+            "last_quantile_s": self.last_quantile,
+            "level_changes": self.level_changes,
+            "classes": classes,
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +328,7 @@ class TenantPolicy:
         classes: Sequence[PriorityClass] = DEFAULT_CLASSES,
         quantum: int = 64,
         default_spec: TenantSpec = TenantSpec(),
+        slo: SloConfig | None = None,
     ):
         assert quantum >= 1, quantum
         self.quantum = int(quantum)
@@ -152,6 +365,12 @@ class TenantPolicy:
         self.admitted: dict[str, int] = {}
         self.served_tokens: dict[str, int] = {}
         self.rate_rejections: dict[str, int] = {}
+        # SLO feedback: the brownout controller (None = open-loop policy)
+        # and the smallest scheduler prefill bucket its level-2 clamp
+        # shrinks victim-class chunk caps / token budgets to (bound by the
+        # scheduler at init via bind_chunk_buckets)
+        self.slo = SloMonitor(slo, self.classes) if slo is not None else None
+        self._min_bucket: int | None = None
 
     # ------------------------------------------------------------ tenants
 
@@ -184,16 +403,74 @@ class TenantPolicy:
 
     # ------------------------------------------------- per-class knobs
 
+    def bind_chunk_buckets(self, buckets: Sequence[int]) -> None:
+        """Scheduler handshake at init: the prefill bucket set, so the
+        level-2 brownout clamp shrinks to a bucket member (any other cap
+        would violate the scheduler's trace bound)."""
+        self._min_bucket = min(buckets) if buckets else None
+
+    def _braked(self, priority: str) -> bool:
+        """Whether the level-2 brownout clamp applies to this class now."""
+        return (self.slo is not None and self.slo.level >= 2
+                and self.slo.degrades(priority)
+                and self._min_bucket is not None)
+
     def chunk_cap(self, priority: str) -> int:
-        """Chunked-prefill chunk cap for a class (0 = scheduler default)."""
-        return self.class_for(priority).prefill_chunk_cap
+        """Chunked-prefill chunk cap for a class (0 = scheduler default);
+        clamped to the smallest prefill bucket under brownout level >= 2."""
+        cap = self.class_for(priority).prefill_chunk_cap
+        if self._braked(priority):
+            return self._min_bucket if cap == 0 else min(cap, self._min_bucket)
+        return cap
 
     def token_budget(self, priority: str) -> int | None:
-        """Per-round prefill token budget override (None = inherit)."""
-        return self.class_for(priority).prefill_token_budget
+        """Per-round prefill token budget override (None = inherit);
+        clamped to the smallest prefill bucket under brownout level >= 2."""
+        budget = self.class_for(priority).prefill_token_budget
+        if self._braked(priority):
+            return (self._min_bucket if budget is None
+                    else min(budget, self._min_bucket))
+        return budget
 
     def ttft_default(self, priority: str) -> float | None:
         return self.class_for(priority).ttft_deadline_s
+
+    # ------------------------------------------------------ SLO feedback
+
+    @property
+    def brownout_level(self) -> int:
+        return self.slo.level if self.slo is not None else 0
+
+    def should_shed(self, priority: str) -> bool:
+        """Brownout admission shed for one submission (seeded, counted)."""
+        return self.slo is not None and self.slo.should_shed(priority)
+
+    def shed_retry_after(self) -> float:
+        """Coarse retry hint for a shed 429 — the target deadline (the
+        soonest the ladder could plausibly have stepped down); the front
+        door overrides it with the predicted queue-drain time."""
+        return max(1.0, self.slo.deadline) if self.slo is not None else 1.0
+
+    def observe_ttft(self, priority: str, ttft_s: float) -> None:
+        if self.slo is not None:
+            self.slo.observe_ttft(priority, ttft_s)
+
+    def observe_latency(self, priority: str, latency_s: float) -> None:
+        if self.slo is not None:
+            self.slo.observe_latency(priority, latency_s)
+
+    def update_slo(self, waiting_ages: Sequence[float] = ()) -> int | None:
+        """One controller step (call once per segment); returns the new
+        brownout level on a change."""
+        if self.slo is None:
+            return None
+        return self.slo.update(waiting_ages)
+
+    def level_of(self, priority: str) -> int:
+        return self.class_for(priority).level
+
+    def slo_snapshot(self) -> dict | None:
+        return self.slo.snapshot() if self.slo is not None else None
 
     # ------------------------------------------------------ rate limiting
 
@@ -304,16 +581,26 @@ class TenantPolicy:
         else:
             ordered = self._tenant_order
         order = [t for t in ordered if t in heads]
+        # elastic DRR: idle tenants' share is redistributed pro-rata to the
+        # backlogged set each round instead of going unused — every visit's
+        # credit is scaled by total_weight / active_weight, so relative
+        # shares among ACTIVE tenants are unchanged (the scale cancels in
+        # any credit ratio) but the round serves the same token volume the
+        # full tenant set would have
+        total_w = sum(self.tenants[t].weight for t in self._tenant_order)
+        active_w = sum(self.tenants[t].weight for t in order)
+        scale = total_w / active_w if active_w else 1.0
         # each cycle opens a quantum×weight visit for every tenant in turn,
         # so service is reached within ceil(max_cost / min_credit) cycles
         max_cost = max(_cost(r) for r in heads.values())
-        min_credit = self.quantum * min(
+        min_credit = self.quantum * scale * min(
             self.tenants[t].weight for t in order)
         cycles = int(max_cost / min_credit) + 2
         for _ in range(cycles):
             for t in order:
                 key = (level, t)
-                d = deficits.get(key, 0.0) + self.quantum * self.tenants[t].weight
+                d = (deficits.get(key, 0.0)
+                     + self.quantum * self.tenants[t].weight * scale)
                 if d >= _cost(heads[t]):
                     if commit:
                         deficits[key] = d - _cost(heads[t])

@@ -104,7 +104,7 @@ import numpy as np
 
 from repro.serve.chaos import ChaosConfig
 from repro.serve.engine import ServeEngine
-from repro.serve.policy import RateLimited, TenantPolicy
+from repro.serve.policy import Overloaded, RateLimited, TenantPolicy
 from repro.serve.request import (CANCELLED, EXPIRED, FINISHED, QUEUED,
                                  RUNNING, Request, SubmitRequest)
 from repro.utils.logging import get_logger
@@ -288,6 +288,10 @@ class ContinuousScheduler:
                         f"{cap} is not in the scheduler's bucket set "
                         f"{self.buckets}"
                     )
+            # brownout handshake: the level-2 clamp shrinks victim-class
+            # chunk caps / token budgets to the SMALLEST bucket, so the
+            # degraded shapes reuse already-compiled prefill programs
+            policy.bind_chunk_buckets(self.buckets)
         # slot -> next chunk start offset for requests still prefilling
         # (admitted to a slot, not yet active; chunks advance one per round)
         self._prefill_start: dict[int, int] = {}
@@ -414,6 +418,11 @@ class ContinuousScheduler:
             # label ("default" without a policy) — the billing basis the
             # trace layer prices into per-tenant J/token
             "tenant_tokens": {},
+            # SLO feedback (PR 9): evictions per priority class (the
+            # batch-first victim policy's audit trail) and brownout ladder
+            # transitions observed by this scheduler
+            "preemptions_by_class": {},
+            "brownout_changes": 0,
         }
 
         # opt-in per-segment trace recorder (ServeConfig.trace, ISSUE 7);
@@ -563,18 +572,30 @@ class ContinuousScheduler:
         req.preempt_t = self.clock()
         self.queue.appendleft(req)
         self.stats["preemptions"] += 1
+        by_cls = self.stats["preemptions_by_class"]
+        by_cls[req.priority] = by_cls.get(req.priority, 0) + 1
         log.debug("preempted rid=%d from slot %d (%s, emitted=%d)",
                   req.rid, slot, reason, len(req.tokens))
 
+    def _class_level(self, slot: int) -> int:
+        """Priority-class level of a resident (0 without a policy — every
+        slot ranks equal and the PR 6 victim order is reproduced exactly)."""
+        if self.policy is None:
+            return 0
+        return self.policy.level_of(self.slots[slot].priority)
+
     def _preempt_for_blocks(self) -> bool:
-        """Pick and evict one victim so growth can retry: least progress
-        first, ties evict the latest arrival (highest rid).  The MOST
-        progressed resident (ties: earliest arrival) is protected — it is
-        never evicted, always fits the pool on its own (``submit`` bounds
-        every request's budget by the capacity), and monotonically runs to
-        completion, so preemption always terminates and the scheduler
-        always makes progress.  Returns False when no evictable resident
-        remains."""
+        """Pick and evict one victim so growth can retry: lowest priority
+        class first (batch before standard before interactive — the PR 9
+        preemption-priority hook), then least progress, ties evict the
+        latest arrival (highest rid).  Without a policy every class level
+        is 0 and the PR 6 least-progress order is unchanged.  The MOST
+        progressed resident (ties: earliest arrival) is protected
+        regardless of class — it is never evicted, always fits the pool on
+        its own (``submit`` bounds every request's budget by the capacity),
+        and monotonically runs to completion, so preemption always
+        terminates and the scheduler always makes progress.  Returns False
+        when no evictable resident remains."""
         residents = [s for s in range(self.n_slots)
                      if self.slots[s] is not None]
         if len(residents) < 2:
@@ -584,7 +605,8 @@ class ContinuousScheduler:
             key=lambda s: (self._progress_key(s), -self.slots[s].rid))
         victim = min(
             (s for s in residents if s != protected),
-            key=lambda s: (self._progress_key(s), -self.slots[s].rid))
+            key=lambda s: (self._class_level(s), self._progress_key(s),
+                           -self.slots[s].rid))
         self._preempt_slot(victim)
         return True
 
@@ -689,6 +711,14 @@ class ContinuousScheduler:
         req.finish_t = now
         req._swap, req._swap_nb = None, 0  # drop any host KV payload
         self.stats["cancelled" if state == CANCELLED else "expired"] += 1
+        if self.policy is not None and state == EXPIRED:
+            # an expiry IS an SLO observation: a request that died before
+            # its first token feeds its waiting age to the monitor as the
+            # TTFT it effectively experienced (the brownout controller must
+            # see misses, not just the survivors' successes)
+            if req.first_token_t is None:
+                self.policy.observe_ttft(req.priority, now - req.submit_t)
+            self.policy.observe_latency(req.priority, now - req.submit_t)
 
     def _sweep_terminal(self) -> None:
         """Honor cancellations and deadlines at the segment boundary: queued
@@ -839,6 +869,11 @@ class ContinuousScheduler:
             cls = self.policy.class_for(req_priority)  # unknown -> ValueError
             if ttft is None:
                 ttft = cls.ttft_deadline_s  # class default TTFT SLO
+            # brownout shed before the rate gate: a shed submission must
+            # not consume the tenant's token-bucket credit
+            if self.policy.should_shed(req_priority):
+                raise Overloaded(req_tenant, self.policy.shed_retry_after(),
+                                 req_priority, self.policy.brownout_level)
             # rate gate last: malformed requests fail as ValueError above
             # even when the tenant is also over rate
             retry = self.policy.charge_rate(req_tenant, self.clock())
@@ -1157,6 +1192,9 @@ class ContinuousScheduler:
                     continue
                 if req.first_token_t is None:
                     req.first_token_t = now
+                    if self.policy is not None:
+                        self.policy.observe_ttft(req.priority,
+                                                 now - req.submit_t)
                 req._emit(int(fh[i]))
                 self._count_token(req)
                 self._note_emission_after_readmit(req, now)
@@ -1168,6 +1206,9 @@ class ContinuousScheduler:
                     req.state = FINISHED
                     req.finish_reason = "length"
                     req.finish_t = now
+                    if self.policy is not None:
+                        self.policy.observe_latency(req.priority,
+                                                    now - req.submit_t)
                     self._vacate_slot(slot)
                     self.stats["retired"] += 1
                 else:
@@ -1270,6 +1311,8 @@ class ContinuousScheduler:
             # a fresh admission's first token never eos-pins (PR 2 contract)
             if req.first_token_t is None:
                 req.first_token_t = now
+                if self.policy is not None:
+                    self.policy.observe_ttft(req.priority, now - req.submit_t)
             req._emit(int(first))
             self._count_token(req)
             self._note_emission_after_readmit(req, now)
@@ -1277,15 +1320,79 @@ class ContinuousScheduler:
                 req.state = FINISHED
                 req.finish_reason = "length"
                 req.finish_t = now
+                if self.policy is not None:
+                    self.policy.observe_latency(req.priority,
+                                                now - req.submit_t)
                 self.stats["retired"] += 1
         return len(pending)
+
+    # ------------------------------------------------- SLO feedback (PR 9)
+
+    def _update_slo(self) -> None:
+        """One brownout-controller step per segment: feed the monitor the
+        target class's CURRENT waiting ages (queued or claimed, no first
+        token yet) so the ladder reacts to a building queue before the
+        damage shows up in completed TTFTs, and trace the transition."""
+        if self.policy is None or self.policy.slo is None:
+            return
+        now = self.clock()
+        target = self.policy.slo.cfg.target_class
+        waiting = [
+            now - r.submit_t
+            for r in list(self.queue) + [s for s in self.slots
+                                         if s is not None]
+            if r.priority == target and r.first_token_t is None
+        ]
+        new_level = self.policy.update_slo(waiting)
+        if new_level is not None:
+            self.stats["brownout_changes"] += 1
+            log.debug("brownout level -> %d (ttft q=%.3fs deadline=%.3fs)",
+                      new_level, self.policy.slo.last_quantile or 0.0,
+                      self.policy.slo.deadline)
+            if self.trace is not None:
+                self.trace.record_brownout(self.stats["segments"], new_level)
+
+    def queue_composition(self) -> tuple[list[int], list[int]]:
+        """Remaining work as (prompt_lens, new_tokens) pairs for the drain
+        predictor: queued requests owe their whole prompt prefill plus
+        their remaining generation; residents owe only their remaining
+        generation (one token stands in for the already-paid prefill)."""
+        plens, news = [], []
+        for r in self.queue:
+            plens.append(r.prompt_len)
+            news.append(max(1, r.max_new_tokens - len(r.tokens)))
+        for r in self.slots:
+            if r is None:
+                continue
+            plens.append(1)
+            news.append(max(1, r.max_new_tokens - len(r.tokens)))
+        return plens, news
+
+    def drain_predictor(self):
+        """A :class:`repro.roofline.autotune.DrainPredictor` bound to this
+        scheduler's knob configuration — the front door calibrates it
+        against measured per-request walls and predicts ``Retry-After``
+        from ``queue_composition()`` instead of a scalar EWMA."""
+        from repro.roofline.autotune import DrainPredictor, KnobConfig
+
+        knobs = KnobConfig(
+            segment_len=self.segment_len,
+            prefill_chunk=self.prefill_chunk if self.chunked else 0,
+            prefill_buckets=len(self.buckets) if self.chunked else 4,
+            spec_k=self.spec_k,
+            block_len=self.block_len if self.paged else 0,
+        )
+        return DrainPredictor(
+            self.engine.arch.cfg, knobs, n_slots=self.n_slots,
+            max_len=self.engine.sc.max_len, paged=self.paged,
+        )
 
     # ------------------------------------------------------------ segment
 
     def run_segment(self) -> int:
-        """chaos → terminal sweep → admit → grow → one compiled segment →
-        stream + retire.  Returns the number of requests still running
-        afterwards.
+        """chaos → terminal sweep → SLO controller step → admit → grow →
+        one compiled segment → stream + retire.  Returns the number of
+        requests still running afterwards.
 
         With speculative decoding each segment step is a draft-and-verify
         round: the program returns an (n_slots, S, k+1) emission block
@@ -1301,6 +1408,7 @@ class ContinuousScheduler:
         debug = self.engine.sc.debug_invariants
         self._inject_chaos()
         self._sweep_terminal()
+        self._update_slo()
         self._admit()
         self._ensure_segment_capacity()
         if not self.active.any():
@@ -1402,6 +1510,9 @@ class ContinuousScheduler:
                 req.state = FINISHED
                 req.finish_reason = "stop" if saw_eos else "length"
                 req.finish_t = now
+                if self.policy is not None:
+                    self.policy.observe_latency(req.priority,
+                                                now - req.submit_t)
                 self._vacate_slot(slot)
                 self.stats["retired"] += 1
         if debug:

@@ -36,7 +36,7 @@ from repro.roofline.analytic import (
     spec_verify_cost,
 )
 
-PHASES = ("prefill", "decode", "spec", "preempt")
+PHASES = ("prefill", "decode", "spec", "preempt", "brownout")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +73,7 @@ class TraceRecorder:
             "decode_tokens": 0, "decode_segments": 0, "decode_steps": 0,
             "spec_tokens": 0, "spec_segments": 0, "spec_live_steps": 0,
             "preemptions": 0, "swap_bytes": 0,
+            "brownout_changes": 0, "brownout_level_peak": 0,
             "flops": 0.0, "hbm_bytes": 0.0,
         }
         # segments repeat the same (batch, steps) shape thousands of times;
@@ -154,6 +155,15 @@ class TraceRecorder:
         self.totals["swap_bytes"] += swap_bytes
         self._push(PhaseRecord("preempt", segment, 1, 0, 0,
                                0.0, float(swap_bytes)))
+
+    def record_brownout(self, segment: int, level: int) -> None:
+        """A brownout-ladder transition (PR 9): the new level rides in the
+        ``steps`` field; zero priced work — the event marks WHEN the
+        overload controller moved, for correlating energy/goodput phases."""
+        self.totals["brownout_changes"] += 1
+        self.totals["brownout_level_peak"] = max(
+            self.totals["brownout_level_peak"], level)
+        self._push(PhaseRecord("brownout", segment, 0, level, 0, 0.0, 0.0))
 
     def note_tenant_tokens(self, tenant: str, n: int = 1) -> None:
         """One (or ``n``) live emissions billed to ``tenant``."""

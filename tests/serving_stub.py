@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from repro.serve.policy import RateLimited
+from repro.serve.policy import Overloaded, RateLimited
 from repro.serve.request import (CANCELLED, EXPIRED, FINISHED, RUNNING,
                                  Request, SubmitRequest)
 from repro.serve.scheduler import BlockAllocator
@@ -87,6 +87,11 @@ class StubScheduler:
             cls = self.policy.class_for(priority)
             if ttft is None:
                 ttft = cls.ttft_deadline_s
+            # brownout shed mirrors the real scheduler: checked before the
+            # rate gate so a shed never consumes bucket credit
+            if self.policy.should_shed(priority):
+                raise Overloaded(tenant, self.policy.shed_retry_after(),
+                                 priority, self.policy.brownout_level)
             retry = self.policy.charge_rate(tenant, self.clock())
             if retry is not None:
                 raise RateLimited(tenant, retry)
@@ -111,6 +116,9 @@ class StubScheduler:
         tok = stub_token(req.prompt, len(req.tokens))
         if req.first_token_t is None:
             req.first_token_t = self.clock()
+            if self.policy is not None:
+                self.policy.observe_ttft(req.priority,
+                                         req.first_token_t - req.submit_t)
         req._emit(tok)
         t = self.stats["tenant_tokens"]
         t[req.tenant] = t.get(req.tenant, 0) + 1
@@ -122,6 +130,9 @@ class StubScheduler:
         req.state = state
         req.finish_reason = reason
         req.finish_t = self.clock()
+        if self.policy is not None and state == FINISHED:
+            self.policy.observe_latency(req.priority,
+                                        req.finish_t - req.submit_t)
         released = len(self.allocator.release(slot))
         self.slots[slot] = None
         self.stats["retired"] += 1
@@ -179,6 +190,12 @@ class StubScheduler:
             time.sleep(self.segment_delay_s)
         self.stats["segments"] += 1
         self._sweep()
+        if self.policy is not None and self.policy.slo is not None:
+            now = self.clock()
+            target = self.policy.slo.cfg.target_class
+            waiting = [now - r.submit_t for r in self.queue
+                       if r.priority == target and r.first_token_t is None]
+            self.policy.update_slo(waiting)
         self._admit()
         emitted = 0
         for slot, req in enumerate(self.slots):

@@ -461,3 +461,139 @@ def test_chaos_under_concurrent_http_clients(engines, seed):
     assert n_done == n_req - sched.stats["cancelled"]
     assert sched.stats["cancelled"] == sched.stats["chaos_cancels"]
     assert sched.allocator.n_free == sched.allocator.capacity
+
+
+# ------------------------------------------- HTTP-layer chaos clients (PR 9)
+
+
+async def _malformed_client(port: int, flavor: int) -> None:
+    """One misbehaving connection: garbage request line, invalid JSON, or a
+    Content-Length that lies (the server's IncompleteReadError path)."""
+    reader, writer = await asyncio.open_connection(HOST, port)
+    try:
+        if flavor == 0:
+            writer.write(b"\x00\xffGARBAGE\r\n\r\n")
+        elif flavor == 1:
+            body = b"{not json"
+            writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                          f"Content-Length: {len(body)}\r\n"
+                          f"Connection: close\r\n\r\n").encode() + body)
+        else:
+            writer.write(b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                         b"Content-Length: 500\r\n"
+                         b"Connection: close\r\n\r\nshort")
+        await writer.drain()
+        if flavor != 2:  # the truncated-body client hangs up instead
+            await asyncio.wait_for(reader.read(256), 5.0)
+    except (ConnectionResetError, BrokenPipeError, asyncio.TimeoutError):
+        pass
+    finally:
+        writer.close()
+
+
+async def _disconnect_client(port: int, payload: dict) -> None:
+    """Stream one event, then vanish mid-stream."""
+    reader, writer, status, _h = await open_generate(HOST, port, payload)
+    assert status == 200
+    ev = await read_sse_event(reader)
+    assert ev is not None
+    writer.close()
+
+
+async def _reading_client(port: int, payload: dict,
+                          slow_s: float = 0.0) -> dict:
+    """A well-behaved (possibly slow-reading) client: reads every event to
+    the terminal one, stalling ``slow_s`` between reads."""
+    reader, writer, status, _h = await open_generate(HOST, port, payload)
+    assert status == 200
+    toks = []
+    try:
+        while True:
+            if slow_s:
+                await asyncio.sleep(slow_s)  # back the socket up
+            ev = await read_sse_event(reader)
+            assert ev is not None, "stream ended without a terminal event"
+            if ev.get("event") == "token":
+                toks.append(ev["data"]["token"])
+            elif ev.get("event") in ("done", "error"):
+                assert ev["event"] == "done", ev
+                assert toks == ev["data"]["tokens"]
+                return ev["data"]
+    finally:
+        writer.close()
+
+
+@pytest.mark.http
+def test_http_chaos_clients_never_wedge_server(engines):
+    """The ChaosConfig HTTP knobs (PR 9): a storm of slow readers,
+    mid-stream disconnects, and malformed-frame bursts against a real
+    engine.  Every well-behaved client (slow ones included) gets its full
+    bit-identical stream, every disconnect is reclaimed, and the server
+    answers /healthz afterwards — it never wedges."""
+    import random as pyrandom
+
+    from repro.serve import ChaosConfig, ContinuousScheduler
+
+    chaos = ChaosConfig(seed=3, http_slow_reader_prob=0.4,
+                        http_slow_reader_s=0.02,
+                        http_disconnect_prob=0.3, http_malformed_prob=0.5)
+    assert chaos.http_enabled and not chaos.enabled
+    rng = pyrandom.Random(chaos.seed)
+    n_req = 8
+    np_rng = np.random.RandomState(chaos.seed)
+    lens = [int(np_rng.randint(3, 12)) for _ in range(n_req)]
+    news = [int(np_rng.randint(8, 20)) for _ in range(n_req)]
+    prompts = [_prompt(950 + i, n) for i, n in enumerate(lens)]
+    want = _oracle(engines, prompts, news)
+    # seeded behavior assignment: disconnect / slow / well-behaved
+    roles = []
+    for _ in range(n_req):
+        if rng.random() < chaos.http_disconnect_prob:
+            roles.append("disconnect")
+        elif rng.random() < chaos.http_slow_reader_prob:
+            roles.append("slow")
+        else:
+            roles.append("ok")
+    n_malformed = sum(rng.random() < chaos.http_malformed_prob
+                      for _ in range(6))
+    assert {"disconnect", "slow", "ok"} <= set(roles) and n_malformed >= 1, (
+        "seed must exercise every misbehavior", roles, n_malformed)
+    sched = ContinuousScheduler(engines["paged"], n_slots=3, segment_len=4,
+                                n_blocks=24)
+
+    async def fn(fd):
+        tasks = []
+        readers = []  # (index, task) for clients expecting a terminal event
+        for i, (p, n, role) in enumerate(zip(prompts, news, roles)):
+            payload = _gen_payload(p, n)
+            if role == "disconnect":
+                # a budget far past the disconnect point, so the cancel
+                # always lands before a natural finish could race it
+                tasks.append(_disconnect_client(
+                    fd.port, _gen_payload(p, 40)))
+            else:
+                t = asyncio.ensure_future(_reading_client(
+                    fd.port, payload,
+                    chaos.http_slow_reader_s if role == "slow" else 0.0))
+                readers.append((i, t))
+                tasks.append(t)
+        for k in range(n_malformed):  # the malformed burst rides alongside
+            tasks.append(_malformed_client(fd.port, k % 3))
+        await asyncio.wait_for(
+            asyncio.gather(*tasks, return_exceptions=True), 120.0)
+        bodies = {i: t.result() for i, t in readers}
+        health = await http_get(HOST, fd.port, "/healthz")
+        return bodies, health
+
+    bodies, health = _run(_with_fd(sched, HttpConfig(heartbeat_s=0.5), fn))
+    # the server survived the storm and still answers
+    assert health["status"] == 200
+    # every reader — slow ones included — got its exact greedy stream
+    for i, body in bodies.items():
+        assert body["finish_reason"] == "length", (i, body)
+        assert body["tokens"] == want[i], i
+    # disconnects were reclaimed, not leaked
+    n_disc = roles.count("disconnect")
+    assert sched.stats["cancelled"] == n_disc
+    assert sched.allocator.n_free == sched.allocator.capacity
+    assert not sched.has_work()

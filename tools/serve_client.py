@@ -5,6 +5,12 @@ printing tokens as SSE events arrive and the terminal usage line at the
 end — or hits the health/stats endpoints.  Stdlib only (the asyncio
 protocol helpers live in ``repro.serve.http``).
 
+429 responses (backpressure, rate limits, brownout sheds) are retried with
+capped exponential backoff: the sleep honors the server's ``Retry-After``
+hint when it exceeds the local schedule, and a seeded jitter factor
+desynchronizes retry storms across clients.  ``--max-retries 0`` restores
+the old fail-fast behavior.
+
 Usage:
     PYTHONPATH=src python tools/serve_client.py --port 8777 \
         --prompt 1,2,3 --max-new-tokens 16 --tenant acme
@@ -16,11 +22,57 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import random
 import sys
 
 sys.path.insert(0, "src")  # runs from the repo root, like tools/check_links
 
 from repro.serve.http import http_get, open_generate, read_sse_event  # noqa: E402
+
+
+def backoff_s(attempt: int, base_s: float, cap_s: float,
+              server_hint_s: float | None, rng: random.Random) -> float:
+    """Sleep before retry ``attempt`` (0-based): capped exponential
+    doubling from ``base_s``, raised to the server's Retry-After hint when
+    that is larger, then jittered to 50–100% so synchronized clients fan
+    out instead of re-colliding."""
+    delay = min(cap_s, base_s * (2 ** attempt))
+    if server_hint_s is not None:
+        delay = min(cap_s, max(delay, server_hint_s))
+    return delay * (0.5 + 0.5 * rng.random())
+
+
+async def _read_error_body(reader, headers) -> str:
+    n = int(headers.get("content-length", "0") or 0)
+    try:
+        return (await reader.readexactly(n)).decode() if n else ""
+    except asyncio.IncompleteReadError:
+        return ""
+
+
+async def _open_with_retry(args, payload):
+    """POST the generate, retrying 429s per the backoff schedule; returns
+    the open ``(reader, writer, status, headers)`` on 200, or the final
+    non-retryable response."""
+    rng = random.Random(args.backoff_seed)
+    attempt = 0
+    while True:
+        reader, writer, status, headers = await open_generate(
+            args.host, args.port, payload)
+        if status != 429 or attempt >= args.max_retries:
+            return reader, writer, status, headers
+        body = await _read_error_body(reader, headers)
+        writer.close()
+        try:
+            hint = float(headers.get("retry-after"))
+        except (TypeError, ValueError):
+            hint = None
+        delay = backoff_s(attempt, args.backoff_base_s, args.backoff_cap_s,
+                          hint, rng)
+        print(f"HTTP 429 {body} — retry {attempt + 1}/{args.max_retries} "
+              f"in {delay:.2f}s", file=sys.stderr)
+        await asyncio.sleep(delay)
+        attempt += 1
 
 
 async def _stream(args) -> int:
@@ -33,14 +85,13 @@ async def _stream(args) -> int:
         payload["tenant"] = args.tenant
     if args.priority:
         payload["priority"] = args.priority
-    reader, writer, status, headers = await open_generate(
-        args.host, args.port, payload)
+    reader, writer, status, headers = await _open_with_retry(args, payload)
     if status != 200:
-        n = int(headers.get("content-length", "0") or 0)
-        body = (await reader.readexactly(n)).decode() if n else ""
+        body = await _read_error_body(reader, headers)
         retry = headers.get("retry-after")
         print(f"HTTP {status}{f' (Retry-After: {retry}s)' if retry else ''}"
               f" {body}", file=sys.stderr)
+        writer.close()
         return 1
     try:
         while True:
@@ -82,6 +133,14 @@ def main() -> None:
     ap.add_argument("--tenant", default=None)
     ap.add_argument("--priority", default=None,
                     help="interactive | standard | batch")
+    ap.add_argument("--max-retries", type=int, default=4,
+                    help="retries on 429 before giving up (0 = fail fast)")
+    ap.add_argument("--backoff-base-s", type=float, default=0.5,
+                    help="first retry delay; doubles per attempt")
+    ap.add_argument("--backoff-cap-s", type=float, default=30.0,
+                    help="ceiling on any single retry delay")
+    ap.add_argument("--backoff-seed", type=int, default=None,
+                    help="jitter seed (default: nondeterministic)")
     ap.add_argument("--health", action="store_true", help="GET /healthz")
     ap.add_argument("--stats", action="store_true", help="GET /v1/stats")
     args = ap.parse_args()
