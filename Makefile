@@ -26,7 +26,7 @@ bench:
 # regenerate the serving benches and compare against the committed baseline
 perf-gate:
 	cp BENCH_serve.json /tmp/BENCH_serve_baseline.json
-	BENCH_REPEATS=2 PYTHONPATH=src $(PY) benchmarks/run.py --only serve_decode,serve_continuous,serve_paged,serve_prefill,serve_energy,serve_http,serve_slo
+	BENCH_REPEATS=2 PYTHONPATH=src $(PY) benchmarks/run.py --only serve_decode,serve_continuous,serve_paged,serve_quant,serve_prefill,serve_energy,serve_http,serve_slo
 	$(PY) benchmarks/perf_gate.py --baseline /tmp/BENCH_serve_baseline.json --new BENCH_serve.json
 
 ci: test bench-smoke

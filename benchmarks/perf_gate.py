@@ -5,8 +5,8 @@ Usage (what .github/workflows/ci.yml runs):
 
     cp BENCH_serve.json /tmp/baseline.json           # committed baseline
     BENCH_REPEATS=1 python benchmarks/run.py \
-        --only serve_decode,serve_continuous,serve_paged,serve_prefill,\
-serve_spec,serve_robust,serve_http,serve_slo,serve_energy
+        --only serve_decode,serve_continuous,serve_paged,serve_quant,\
+serve_prefill,serve_spec,serve_robust,serve_http,serve_slo,serve_energy
     python benchmarks/perf_gate.py --baseline /tmp/baseline.json --new BENCH_serve.json
 
 Gated metrics are the machine-portable RATIOS (compiled-vs-python decode
@@ -78,6 +78,11 @@ RATIO_METRICS = {
     # uncontrolled on the same saturating workload (ISSUE 9 acceptance
     # criterion); lands through the warn-and-skip-on-new-section path
     "serve_slo.goodput_ratio": 0.9,
+    # int8 weights + int8 KV must hold >= 1.0x the fp32-dense tok/s on the
+    # SAME block-pruned model (ISSUE 10 acceptance criterion — the quant
+    # path skips pruned blocks, so density savings must at least cancel the
+    # dequant overhead); lands through the warn-and-skip-on-new-section path
+    "serve_quant.tok_s_ratio": 1.0,
 }
 ABS_METRICS = [
     "serve_decode.batch.1.decode_tok_s_compiled",
@@ -86,6 +91,8 @@ ABS_METRICS = [
     "serve_continuous.static.tok_s",
     "serve_paged.paged.tok_s",
     "serve_paged.dense.tok_s",
+    "serve_quant.quant.tok_s",
+    "serve_quant.dense.tok_s",
     "serve_prefill.batched.tok_s",
     "serve_prefill.per_request.tok_s",
     "serve_spec.spec.tok_s",
@@ -155,6 +162,16 @@ SLO_P99_RATIO_METRIC, SLO_P99_RATIO_BOUND = (
     "serve_slo.interactive_p99_ratio", 0.8)
 SLO_DISRUPT_METRIC, SLO_DISRUPT_FLOOR = (
     "serve_slo.controlled.batch_disruptions", 1)
+# quantized serving (ISSUE 10) hard floors, new run only and deterministic:
+# the int8 representation must actually be smaller than fp32-dense on BOTH
+# sides (weight bytes and KV-cache bytes are shape-derived constants), and
+# the greedy token-match rate vs the fp32 oracle must hold the floor the
+# bench records alongside it (same pruning support on both engines, so
+# every mismatch is int8 noise — a collapse means the dequant path broke)
+QUANT_WBYTES_METRIC = "serve_quant.weight_bytes_saved_x"
+QUANT_CBYTES_METRIC = "serve_quant.cache_bytes_saved_x"
+QUANT_MATCH_METRIC = "serve_quant.token_match_rate"
+QUANT_MATCH_FLOOR_METRIC = "serve_quant.token_match_floor"
 
 
 def _lookup(data: dict, path: str):
@@ -421,6 +438,36 @@ def main() -> int:
         )
     else:
         print(f"slo batch disruptions: {disrupt} >= {SLO_DISRUPT_FLOOR}")
+
+    for metric, what in ((QUANT_WBYTES_METRIC, "weight"),
+                         (QUANT_CBYTES_METRIC, "KV-cache")):
+        saved_x = _lookup(new, metric)
+        if saved_x is None:
+            failures.append(f"{metric}: missing from new run")
+        elif saved_x < 1.0:
+            failures.append(
+                f"{metric}: {saved_x:.2f}x — the int8 {what} bytes exceed "
+                "the fp32-dense layout"
+            )
+        else:
+            print(f"quant {what} bytes: {saved_x:.2f}x smaller than dense "
+                  "(>= 1.0x)")
+
+    match = _lookup(new, QUANT_MATCH_METRIC)
+    match_floor = _lookup(new, QUANT_MATCH_FLOOR_METRIC)
+    if match is None or match_floor is None:
+        failures.append(
+            f"{QUANT_MATCH_METRIC} / {QUANT_MATCH_FLOOR_METRIC}: missing "
+            "from new run"
+        )
+    elif match < match_floor:
+        failures.append(
+            f"{QUANT_MATCH_METRIC}: {match:.2f} < floor {match_floor:.2f} — "
+            "greedy int8 outputs collapsed away from the fp32 oracle"
+        )
+    else:
+        print(f"quant token match vs fp32: {match:.2f} >= floor "
+              f"{match_floor:.2f}")
 
     spec_traces = _lookup(new, SPEC_TRACE_METRIC)
     spec_bound = _lookup(new, SPEC_TRACE_BOUND_METRIC)

@@ -70,3 +70,58 @@ def block_sparse_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((m, nb * bn), jnp.float32),
         interpret=interpret,
     )(indices, x, vflat)
+
+
+def _int8_kernel(idx_ref, x_ref, v_ref, s_ref, o_ref):
+    j = pl.program_id(1)
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # dequant-inside-kernel: the int8 block is scaled against its per-block
+    # fp32 scale at the MXU's edge — weights stay int8 in HBM and VMEM
+    w = v_ref[0].astype(jnp.float32) * s_ref[j, r]
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+
+def block_sparse_matmul_int8_pallas(
+    x: jax.Array,  # (M, K)
+    values: jax.Array,  # (Nb, R, bk, bn) int8
+    scales: jax.Array,  # (Nb, R) fp32 per-block dequant scales
+    indices: jax.Array,  # (Nb, R) int32
+    *,
+    bm: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Int8-weight variant (ISSUE 10): same sparse gather as the fp kernel,
+    but kept blocks travel HBM→VMEM as int8 (4× fewer weight bytes than fp32)
+    and dequantize in-kernel against ``scales``.  The whole (Nb, R) scale
+    array rides along every grid step like the sonic codebook — it is tiny
+    (one fp32 per kept block) and VMEM-resident.  Returns y (M, N) fp32."""
+    m, k = x.shape
+    nb, r, bk, bn = values.shape
+    assert k == 0 or k % bk == 0, (k, bk)
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    vflat = values.reshape(nb * r, bk, bn)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, nb, r),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, rr, idx: (i, idx[j, rr])),
+            pl.BlockSpec((1, bk, bn), lambda i, j, rr, idx: (j * r + rr, 0, 0)),
+            pl.BlockSpec(scales.shape, lambda i, j, rr, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, rr, idx: (i, j)),
+    )
+    return pl.pallas_call(
+        _int8_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nb * bn), jnp.float32),
+        interpret=interpret,
+    )(indices, x, vflat, scales)

@@ -20,3 +20,15 @@ def block_sparse_matmul_ref(
     return jnp.dot(
         x.astype(jnp.float32), w, preferred_element_type=jnp.float32
     ).astype(x.dtype)
+
+
+def block_sparse_matmul_int8_ref(
+    x: jax.Array,  # (M, K)
+    values: jax.Array,  # (Nb, R, bk, bn) int8 kept blocks
+    scales: jax.Array,  # (Nb, R) fp32 per-block dequant scales
+    indices: jax.Array,  # (Nb, R) int32 K-block ids
+    k_blocks: int,
+) -> jax.Array:
+    """fp32 oracle for the int8 kernel: dequantize, densify, matmul."""
+    deq = values.astype(jnp.float32) * scales[:, :, None, None]
+    return block_sparse_matmul_ref(x, deq, indices, k_blocks)

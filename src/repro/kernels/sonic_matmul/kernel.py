@@ -74,6 +74,58 @@ def sonic_matvec_pallas(
     )(indices, x, vflat, codebook)
 
 
+def _matvec_int8_kernel(idx_ref, x_ref, v_ref, s_ref, o_ref):
+    j = pl.program_id(0)
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # dequant-inside-kernel against the per-block scale (ISSUE 10): the
+    # kept block arrives as raw int8 and is scaled at the MXU's edge
+    w = v_ref[0].astype(jnp.float32) * s_ref[j, r]
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+
+def sonic_matvec_int8_pallas(
+    x: jax.Array,  # (M, K) with M below the tile threshold (decode rows)
+    values: jax.Array,  # (Nb, R, bk, bn) int8
+    scales: jax.Array,  # (Nb, R) fp32 per-block dequant scales
+    indices: jax.Array,  # (Nb, R) int32
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode-shaped int8-weight matvec: same no-M-padding grid over (Nb, R)
+    as ``sonic_matvec_pallas``, but kept blocks stream as raw int8 against a
+    per-block fp32 scale instead of cluster ids against a codebook — the
+    scale array (one fp32 per kept block) rides along every step like the
+    codebook does."""
+    m, k = x.shape
+    nb, r, bk, bn = values.shape
+    assert k % bk == 0, (k, bk)
+    vflat = values.reshape(nb * r, bk, bn)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, r),
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda j, rr, idx: (0, idx[j, rr])),
+            pl.BlockSpec((1, bk, bn), lambda j, rr, idx: (j * r + rr, 0, 0)),
+            pl.BlockSpec(scales.shape, lambda j, rr, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, rr, idx: (0, j)),
+    )
+    return pl.pallas_call(
+        _matvec_int8_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nb * bn), jnp.float32),
+        interpret=interpret,
+    )(indices, x, vflat, scales)
+
+
 def _kernel(idx_ref, x_ref, v_ref, cb_ref, o_ref):
     r = pl.program_id(2)
 

@@ -8,9 +8,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.clustering import ClusteringConfig, cluster_weights
-from repro.core.sonic_layers import make_block_sparse
+from repro.core.sonic_layers import BlockSparseWeightInt8, make_block_sparse
 from repro.kernels.sonic_matmul.kernel import (
     sonic_matmul_pallas,
+    sonic_matvec_int8_pallas,
     sonic_matvec_pallas,
 )
 
@@ -114,5 +115,53 @@ def sonic_matvec(x: jax.Array, w: SonicWeight) -> jax.Array:
     x2 = x[None] if squeeze else x
     y = sonic_matvec_pallas(
         x2, w.idx_values, w.codebook, w.indices, interpret=not _ON_TPU
+    ).astype(x.dtype)
+    return y[0] if squeeze else y
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def sonic_matmul_int8(
+    x: jax.Array, w: BlockSparseWeightInt8, *, bm: int = 256
+) -> jax.Array:
+    """Int8-weight x (..., K) @ W → (..., N), shape-dispatched like
+    ``sonic_matmul``: flattened M < ``DECODE_M_THRESHOLD`` takes the
+    unpadded int8 matvec kernel, larger M the tiled int8 matmul kernel.
+    (The int8-scale format has no codebook stage, so the tiled path is the
+    block-sparse int8 kernel — structure skip + in-kernel dequant is the
+    whole fusion.)"""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    n = w.dense_shape[1]
+    if m < DECODE_M_THRESHOLD:
+        y = sonic_matvec_int8_pallas(
+            x2, w.values, w.scales, w.indices, interpret=not _ON_TPU
+        )
+        return y.reshape(*lead, n).astype(x.dtype)
+    from repro.kernels.block_sparse_matmul.kernel import (
+        block_sparse_matmul_int8_pallas,
+    )
+
+    bm_eff = min(bm, max(8, m))
+    pad_m = (-m) % bm_eff
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+    y = block_sparse_matmul_int8_pallas(
+        x2, w.values, w.scales, w.indices, bm=bm_eff, interpret=not _ON_TPU
+    )
+    if pad_m:
+        y = y[:m]
+    return y.reshape(*lead, n).astype(x.dtype)
+
+
+@jax.jit
+def sonic_matvec_int8(x: jax.Array, w: BlockSparseWeightInt8) -> jax.Array:
+    """Decode-shaped int8 entry point: x (K,) or (B, K) → (N,) / (B, N),
+    always through the no-padding int8 matvec kernel regardless of B."""
+    squeeze = x.ndim == 1
+    x2 = x[None] if squeeze else x
+    y = sonic_matvec_int8_pallas(
+        x2, w.values, w.scales, w.indices, interpret=not _ON_TPU
     ).astype(x.dtype)
     return y[0] if squeeze else y

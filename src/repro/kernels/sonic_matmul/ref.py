@@ -34,3 +34,35 @@ def sonic_matvec_ref(
     x2 = x[None] if x.ndim == 1 else x
     y = sonic_matmul_ref(x2, idx_values, codebook, indices, k_blocks)
     return y[0] if x.ndim == 1 else y
+
+
+def sonic_matmul_int8_ref(
+    x: jax.Array,  # (M, K)
+    values: jax.Array,  # (Nb, R, bk, bn) int8 kept blocks
+    scales: jax.Array,  # (Nb, R) fp32 per-block dequant scales
+    indices: jax.Array,  # (Nb, R) int32 K-block ids
+    k_blocks: int,
+) -> jax.Array:
+    """fp32 oracle for the int8 variants: dequantize, densify, matmul."""
+    values = values.astype(jnp.float32) * scales[:, :, None, None]
+    nb, r, bk, bn = values.shape
+    k, n = k_blocks * bk, nb * bn
+    w = jnp.zeros((k_blocks, nb, bk, bn), jnp.float32)
+    w = w.at[indices, jnp.arange(nb)[:, None]].set(values)
+    w = w.transpose(0, 2, 1, 3).reshape(k, n)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def sonic_matvec_int8_ref(
+    x: jax.Array,  # (K,) or (B, K) decode activations
+    values: jax.Array,
+    scales: jax.Array,
+    indices: jax.Array,
+    k_blocks: int,
+) -> jax.Array:
+    """Oracle for the decode-shaped int8 matvec — same math, decode shapes."""
+    x2 = x[None] if x.ndim == 1 else x
+    y = sonic_matmul_int8_ref(x2, values, scales, indices, k_blocks)
+    return y[0] if x.ndim == 1 else y

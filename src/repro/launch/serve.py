@@ -26,6 +26,11 @@ Usage (CPU smoke):
     # trace the run + energy-per-token report, with autotuned knobs:
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --workload poisson --trace --autotune
+    # fully quantized serving: int8 block-sparse weights + int8 KV cache
+    # (chunked prefill and speculation both run first-class, ISSUE 10):
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --workload poisson --cache-quant-int8 \
+        --weight-quant int8 --weight-quant-sparsity 0.5
 """
 from __future__ import annotations
 
@@ -80,7 +85,7 @@ def _poisson_draws(args, vocab: int):
     return arrivals, p_lens, n_news, prompts
 
 
-def _run_poisson(eng: ServeEngine, args, draws=None) -> tuple[int, float]:
+def _run_poisson(eng: ServeEngine, args, draws=None):
     arrivals, p_lens, n_news, prompts = (
         draws if draws is not None else _poisson_draws(args, eng.cfg.vocab_size))
 
@@ -217,7 +222,7 @@ def _run_poisson(eng: ServeEngine, args, draws=None) -> tuple[int, float]:
             log.info("energy [%-7s] %.3e J/token (%.3g J over the trace), "
                      "%.1f tok/s/W at %.2f W", name, r["j_per_token"],
                      r["trace_energy_j"], r["tok_per_s_per_w"], r["power_w"])
-    return useful, total
+    return useful, total, sched
 
 
 # sparsity assumptions for the --trace energy report, matching the
@@ -313,6 +318,19 @@ def main() -> None:
     ap.add_argument("--spec-sparsity", type=float, default=0.75,
                     help="weight sparsity of the 'self' drafter conversion "
                          "(0.0 = exact copy, full acceptance)")
+    ap.add_argument("--cache-quant-int8", action="store_true",
+                    help="store the KV cache as int8 with per-position "
+                         "scales; chunked prefill and speculative decoding "
+                         "run first-class (bit-identical to the sequential "
+                         "int8-KV path)")
+    ap.add_argument("--weight-quant", default="none",
+                    choices=("none", "int8"),
+                    help="serve int8 block-quantized weights, dequantized "
+                         "in-kernel against per-block scales")
+    ap.add_argument("--weight-quant-sparsity", type=float, default=0.0,
+                    help="block-prune the served weights to this sparsity "
+                         "before int8 quantization (pruned blocks are "
+                         "skipped entirely; requires --weight-quant int8)")
     ap.add_argument("--trace", action="store_true",
                     help="record per-segment phase traces (host-side "
                          "counters priced through the analytic roofline) "
@@ -365,6 +383,15 @@ def main() -> None:
     if args.autotune and args.workload != "poisson":
         raise SystemExit("--autotune only applies to the slot scheduler: "
                          "pass --workload poisson")
+    if args.weight_quant_sparsity and args.weight_quant != "int8":
+        raise SystemExit("--weight-quant-sparsity requires "
+                         "--weight-quant int8")
+    if not 0.0 <= args.weight_quant_sparsity < 1.0:
+        raise SystemExit("--weight-quant-sparsity must be in [0, 1)")
+    # quantization changes the bytes the roofline moves per element
+    cache_bpe = 1.03 if args.cache_quant_int8 else 2.0
+    weight_bpe = (1.01 * (1.0 - args.weight_quant_sparsity)
+                  if args.weight_quant == "int8" else 2.0)
     draws = None
     predicted_tok_s = None
     if args.autotune:
@@ -378,7 +405,9 @@ def main() -> None:
                          max_len=args.prompt_len + args.new_tokens + 1
                          + args.spec_k)
         res = autotune(arch.cfg, w, paged=(args.kv_layout == "paged"),
-                       spec_ks=(0, args.spec_k) if args.spec_k else (0,))
+                       spec_ks=(0, args.spec_k) if args.spec_k else (0,),
+                       cache_bytes_per_elem=cache_bpe,
+                       weight_bytes_per_elem=weight_bpe)
         log.info("autotune over %d candidates:\n%s", len(res.ranked),
                  res.report())
         best = res.best
@@ -389,13 +418,21 @@ def main() -> None:
         if args.kv_layout == "paged":
             args.block_len = best.block_len
         if args.spec_k and best.spec_k == 0:
-            args.spec_k = 0  # the model says speculation doesn't pay here
+            if args.trace:
+                # at the assumed acceptance of 1.0 speculation never pays;
+                # keep it on so the trace measures the real acceptance and
+                # the post-run re-rank can judge it on real numbers
+                log.info("autotune ranked spec_k=0 at assumed acceptance "
+                         "1.0 — keeping --spec-k %d under --trace to "
+                         "measure the real acceptance", args.spec_k)
+            else:
+                args.spec_k = 0  # the model says speculation doesn't pay
         log.info("autotune pick: %s (segment_len=%d prefill_chunk=%d "
                  "prefill_buckets=%d block_len=%d spec_k=%d) — predicted "
                  "%.1f tok/s in model units", best.label(), best.segment_len,
                  best.prefill_chunk, best.prefill_buckets, best.block_len,
                  best.spec_k, predicted_tok_s)
-    plan = MeshPlan()
+    plan = MeshPlan(cache_quant_int8=args.cache_quant_int8)
     params = arch.init_params(jax.random.PRNGKey(args.seed))
     # spec decoding writes up to spec_k rejected-tail tokens past the cursor
     max_len = args.prompt_len + args.new_tokens + 1 + args.spec_k
@@ -422,14 +459,39 @@ def main() -> None:
         block_len=args.block_len,
         spec=spec,
         trace=args.trace,
+        weight_quant=args.weight_quant,
+        weight_quant_sparsity=args.weight_quant_sparsity,
     )
     eng = ServeEngine(arch, params, plan, sc)
     if args.workload == "poisson":
-        useful, total = _run_poisson(eng, args, draws)
+        useful, total, sched = _run_poisson(eng, args, draws)
         if predicted_tok_s is not None:
             log.info("autotune: predicted %.1f tok/s (model units, ranking "
                      "only) vs measured %.1f tok/s", predicted_tok_s,
                      useful / total if total > 0 else 0.0)
+        # close the PR 7 loop: re-rank with the acceptance length this run
+        # actually measured, so speculation competes on real numbers
+        if (args.autotune and sched.trace is not None
+                and sched.spec is not None):
+            acc = sched.trace.spec_accept_len()
+            if acc is not None:
+                from repro.roofline.autotune import WorkloadSpec, autotune
+
+                _, p_lens, n_news, _ = draws
+                w = WorkloadSpec(tuple(int(x) for x in p_lens),
+                                 tuple(int(x) for x in n_news),
+                                 n_slots=args.slots,
+                                 max_len=max_len)
+                res2 = autotune(arch.cfg, w,
+                                paged=(args.kv_layout == "paged"),
+                                spec_ks=(0, sched.spec.k),
+                                spec_accept_len=acc,
+                                cache_bytes_per_elem=cache_bpe,
+                                weight_bytes_per_elem=weight_bpe)
+                log.info("autotune re-rank with measured acceptance "
+                         "%.2f tok/step: pick %s (predicted %.1f tok/s, "
+                         "spec_k=%d)", acc, res2.best.label(),
+                         res2.ranked[0].tok_s, res2.best.spec_k)
     else:
         _run_batch(eng, args)
 

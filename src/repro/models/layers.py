@@ -36,7 +36,14 @@ def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
 
 
 def dense_apply(p: Params, x: jax.Array) -> jax.Array:
-    y = x @ p["kernel"].astype(x.dtype)
+    if "qvalues" in p:  # int8 block-sparse serving weights (ISSUE 10):
+        # the projection dict was rewritten by ``quantize_serve_params`` —
+        # contract only the kept blocks against their per-block scales
+        from repro.core.sonic_layers import serve_quant_apply
+
+        y = serve_quant_apply(p, x)
+    else:
+        y = x @ p["kernel"].astype(x.dtype)
     if "bias" in p:
         y = y + p["bias"].astype(x.dtype)
     return y
@@ -438,31 +445,36 @@ def attention_apply(
             "chunk-resume prefill starting at cache_pos (batch-1 whole-"
             "prompt prefill runs dense, then write_cache_block installs it)"
         )
-        assert cache_scales is None, "paged + int8 KV cache not supported"
         k_pool, v_pool = cache
-        if s == 1:  # decode: one token per slot
-            k_pool = paged_cache_write(k_pool, block_table, k, cache_pos)
-            v_pool = paged_cache_write(v_pool, block_table, v, cache_pos)
-            out = decode_attention(
-                q,
-                paged_cache_gather(k_pool, block_table),
-                paged_cache_gather(v_pool, block_table),
-                cache_pos,
-            )
-        elif decode_chunk:  # speculative-verify window at block offsets
-            k_pool = paged_cache_write_chunk(k_pool, block_table, k, cache_pos)
-            v_pool = paged_cache_write_chunk(v_pool, block_table, v, cache_pos)
-            out = decode_attention(
-                q,
-                paged_cache_gather(k_pool, block_table),
-                paged_cache_gather(v_pool, block_table),
-                cache_pos,
-            )
+        quant = cache_scales is not None
+        if quant:
+            # per-block KV scales ride the SAME block table as the values:
+            # scale pools are (n_blocks, block_len, KH) — one fp32 per
+            # cached position per head — so the write/gather helpers below
+            # (which only index leading dims) work on them unchanged
+            ks_pool, vs_pool = cache_scales
+            k_w, ks_new = quantize_kv(k)
+            v_w, vs_new = quantize_kv(v)
+        else:
+            k_w, v_w = k, v
+        write = paged_cache_write if s == 1 else paged_cache_write_chunk
+        k_pool = write(k_pool, block_table, k_w, cache_pos)
+        v_pool = write(v_pool, block_table, v_w, cache_pos)
+        if quant:
+            ks_pool = write(ks_pool, block_table, ks_new, cache_pos)
+            vs_pool = write(vs_pool, block_table, vs_new, cache_pos)
+        k_virt = paged_cache_gather(k_pool, block_table)
+        v_virt = paged_cache_gather(v_pool, block_table)
+        if quant:
+            k_virt = dequantize_kv(
+                k_virt, paged_cache_gather(ks_pool, block_table), q.dtype)
+            v_virt = dequantize_kv(
+                v_virt, paged_cache_gather(vs_pool, block_table), q.dtype)
+        if s == 1 or decode_chunk:
+            # decode step / speculative-verify window: one plain-softmax
+            # row per query token over the gathered (dequantized) cache
+            out = decode_attention(q, k_virt, v_virt, cache_pos)
         else:  # chunk-resume prefill at block-table offsets
-            k_pool = paged_cache_write_chunk(k_pool, block_table, k, cache_pos)
-            v_pool = paged_cache_write_chunk(v_pool, block_table, v, cache_pos)
-            k_virt = paged_cache_gather(k_pool, block_table)
-            v_virt = paged_cache_gather(v_pool, block_table)
             kv_pos = jnp.broadcast_to(
                 jnp.arange(k_virt.shape[1], dtype=jnp.int32),
                 (b, k_virt.shape[1]),
@@ -471,7 +483,9 @@ def attention_apply(
             out = flash_attention(q, k_virt, v_virt, pos2d, kv_pos,
                                   causal=causal)
         out = dense_apply(p["wo"], out.reshape(b, s, h * dh))
-        return out, (k_pool, v_pool)
+        new_cache = ((k_pool, v_pool, ks_pool, vs_pool) if quant
+                     else (k_pool, v_pool))
+        return out, new_cache
     if cache is None:
         pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
         out = flash_attention(q, k, v, pos2d, pos2d, causal=causal)
@@ -500,16 +514,32 @@ def attention_apply(
             if quant:
                 ks_cache = plan.constrain(ks_cache, *cspec[:3])
                 vs_cache = plan.constrain(vs_cache, *cspec[:3])
-        if s == 1 or (decode_chunk and cache_pos is not None):
-            # decode step / speculative-verify window: attend over the
-            # (dequantized) cache, one plain-softmax row per query token
-            assert cache_pos is not None
-            assert not (decode_chunk and quant), (
-                "speculative verification over an int8-quantized cache is "
-                "not wired (the verify window must recompute exactly what "
-                "sequential decode would — serve with spec=None under "
-                "cache_quant_int8)"
+        if quant and s > 1 and not decode_chunk:
+            # int8-KV bit-exactness recipe (ISSUE 10, docs/serving.md):
+            # EVERY prefill — whole-prompt and chunk-resume alike — attends
+            # the dequantized cache it just wrote, never the exact fresh
+            # k/v.  Whole-prompt prefill is then literally the write_pos=0
+            # case of chunk-resume, so chunked prefill is bitwise identical
+            # to whole-prompt under quant, and the decode/verify branch
+            # below attends the same dequantized values — one value stream
+            # for all paths.  Stale rows past the causal frontier are
+            # masked to exact zeros.
+            k_att = dequantize_kv(k_cache, ks_cache, q.dtype)
+            v_att = dequantize_kv(v_cache, vs_cache, q.dtype)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(k_cache.shape[1], dtype=jnp.int32),
+                (b, k_cache.shape[1]),
             )
+            pos2d = positions if positions.ndim == 2 else positions[:, 0, :]
+            out = flash_attention(q, k_att, v_att, pos2d, kv_pos,
+                                  causal=causal)
+        elif s == 1 or (decode_chunk and cache_pos is not None):
+            # decode step / speculative-verify window: attend over the
+            # (dequantized) cache, one plain-softmax row per query token —
+            # under quant each verify row recomputes exactly what the
+            # sequential decode step would, so greedy spec outputs stay
+            # bit-identical to non-speculative int8-KV decoding
+            assert cache_pos is not None
             if quant:
                 k_att = dequantize_kv(k_cache, ks_cache, q.dtype)
                 v_att = dequantize_kv(v_cache, vs_cache, q.dtype)
@@ -520,13 +550,6 @@ def attention_apply(
             # (prefix from earlier chunks + this chunk's freshly written
             # rows); positions past the chunk end are causally masked, so
             # stale tenant rows contribute exact zeros
-            assert not quant, (
-                "chunk-resume prefill over an int8-quantized cache is not "
-                "wired (the whole-prompt path attends over exact fresh k/v; "
-                "resuming would attend dequantized values and break the "
-                "bit-identical greedy contract) — serve with "
-                "prefill_chunk=0 under cache_quant_int8"
-            )
             kv_pos = jnp.broadcast_to(
                 jnp.arange(k_cache.shape[1], dtype=jnp.int32),
                 (b, k_cache.shape[1]),
@@ -590,4 +613,8 @@ def lm_head_init(key, cfg: ModelConfig) -> Params:
 
 
 def lm_head_apply(p: Params, x: jax.Array) -> jax.Array:
+    if "qvalues" in p:  # int8 block-sparse serving weights (ISSUE 10)
+        from repro.core.sonic_layers import serve_quant_apply
+
+        return serve_quant_apply(p, x)
     return x @ p["kernel"].astype(x.dtype)

@@ -82,8 +82,8 @@ class Arch:
         exactly the chunked-prefill one: rwkv's O(1) recurrent state cannot
         be rolled back by truncating a cursor, hybrid mixes KV with
         recurrent leaves, encoder-only never decodes.  (The int8-quantized
-        KV cache is additionally excluded at the engine level — a plan
-        property, not a family one.)"""
+        KV cache is NOT excluded: verify rows attend the same dequantized
+        values sequential decode attends — ISSUE 10.)"""
         return self.chunked_prefill_skip_reason()
 
     # -- paged KV (serving; see check_paged_cache_contract) -----------------

@@ -153,7 +153,7 @@ def trunk_apply(
         if quant:
             lp, kc, vc, ks, vs = inp
             x, new_c = layer_apply(lp, cfg, x, positions, plan,
-                                   (kc, vc, ks, vs), cache_pos,
+                                   (kc, vc, ks, vs), cache_pos, block_table,
                                    decode_chunk=decode_chunk)
         else:
             lp, kc, vc = inp
@@ -266,10 +266,19 @@ def init_paged_cache(
     to an identical pytree (``registry.check_paged_cache_contract``).
     """
     assert n_blocks >= 2 and block_len >= 1, (n_blocks, block_len)
-    if plan is not None and plan.cache_quant_int8:
-        raise NotImplementedError("paged KV + int8 cache quant not supported")
     kh_eff = cfg.n_kv_heads * (plan.kv_repeat if plan else 1)
     shape = (cfg.n_layers, n_blocks, block_len, kh_eff, cfg.head_dim)
+    if plan is not None and plan.cache_quant_int8:
+        # per-block KV scales ride the same block table as the values: the
+        # scale pools drop the Dh axis (one fp32 per position per head) but
+        # keep the (L, n_blocks, block_len, KH) leading layout, so every
+        # write/gather/scatter helper indexes them identically
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1], jnp.float32),
+        }
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

@@ -102,16 +102,22 @@ def _attn_flops(cfg: ModelConfig, tokens: float, s_ctx: float, causal: bool,
 
 
 def analytic_cost(
-    cfg: ModelConfig, shape: ShapeSpec, cache_bytes_per_elem: float = 2.0
+    cfg: ModelConfig, shape: ShapeSpec, cache_bytes_per_elem: float = 2.0,
+    weight_bytes_per_elem: float = 2.0,
 ) -> CellCost:
     """``cache_bytes_per_elem``: 2.0 for bf16 KV cache, 1.03 for the int8 +
-    per-position-scale cache (§Perf A2/C)."""
+    per-position-scale cache (§Perf A2/C).  ``weight_bytes_per_elem``: 2.0
+    for bf16 weights, ~1.01·(1 − sparsity) for the int8 block-sparse serving
+    format (ISSUE 10) — int8 values + one fp32 scale and one int32 index per
+    kept block, with pruned blocks never leaving HBM (fold the density in at
+    the caller; ``serve/trace.py`` does)."""
     n_active, n_total = _param_counts(cfg)
     b, s = shape.global_batch, shape.seq_len
     kind = shape.kind
     tokens = float(b * s) if kind != "decode" else float(b)
     s_ctx = float(s)
-    bytes_per = 2.0  # bf16 weights/activations on the wire
+    bytes_per = 2.0  # bf16 activations on the wire
+    wb = weight_bytes_per_elem
 
     lin_u = 2.0 * n_active * tokens  # useful linear FLOPs, fwd
     attn_u, attn_x = _attn_flops(cfg, tokens, s_ctx, causal=True,
@@ -125,20 +131,20 @@ def analytic_cost(
         # bwd = 2× fwd; remat(nothing_saveable) re-runs fwd once more
         model = 3.0 * (lin_u + attn_u)
         hlo = (3.0 + 1.0) * (lin_u * moe_pad + attn_x)
-        weight_traffic = 3.0 * n_total * bytes_per  # fwd + remat-fwd + bwd reads
+        weight_traffic = 3.0 * n_total * wb  # fwd + remat-fwd + bwd reads
         opt_traffic = 2.0 * n_total * (2 + 2) * 2  # m,v read+write (bf16/fp32 mix)
         act_traffic = 12.0 * tokens * cfg.d_model * bytes_per * cfg.n_layers
         hbm = weight_traffic + opt_traffic + act_traffic
     elif kind == "prefill":
         model = lin_u + attn_u
         hlo = lin_u * moe_pad + attn_x
-        weight_traffic = n_total * bytes_per
+        weight_traffic = n_total * wb
         act_traffic = 8.0 * tokens * cfg.d_model * bytes_per * cfg.n_layers
         hbm = weight_traffic + act_traffic
     else:  # decode
         model = lin_u + attn_u
         hlo = lin_u + attn_x
-        weight_traffic = n_active * bytes_per  # active weights read once
+        weight_traffic = n_active * wb  # active weights read once
         kh_eff = cfg.n_kv_heads
         cb = cache_bytes_per_elem
         cache_traffic = (
@@ -191,20 +197,22 @@ class StepCost:
 
 
 def decode_step_cost(
-    cfg: ModelConfig, batch: int, s_ctx: int, cache_bytes_per_elem: float = 2.0
+    cfg: ModelConfig, batch: int, s_ctx: int, cache_bytes_per_elem: float = 2.0,
+    weight_bytes_per_elem: float = 2.0,
 ) -> StepCost:
     """One masked decode step over ``batch`` slot rows attending ``s_ctx``
     key positions each.
 
     Delegates to :func:`analytic_cost` (kind="decode") so the closed form
-    stays consistent across model families.  For plain attention families:
+    stays consistent across model families.  For plain attention families
+    (wb = weight_bytes_per_elem, cb = cache_bytes_per_elem):
 
       flops = 2·n_active·b  +  4·h·dh·s_ctx·b·L
-      bytes = 2·n_active  +  2·b·s_ctx·kh·dh·cb·L  +  4·b·d·2·L
+      bytes = wb·n_active  +  2·b·s_ctx·kh·dh·cb·L  +  4·b·d·2·L
     """
     cell = analytic_cost(
         cfg, ShapeSpec("decode_step", int(s_ctx), int(batch), "decode"),
-        cache_bytes_per_elem,
+        cache_bytes_per_elem, weight_bytes_per_elem,
     )
     return StepCost(cell.hlo_flops_est, cell.hbm_bytes, dict(cell.breakdown))
 
@@ -216,6 +224,7 @@ def prefill_chunk_cost(
     start: int = 0,
     ctx_sum: float | None = None,
     cache_bytes_per_elem: float = 2.0,
+    weight_bytes_per_elem: float = 2.0,
 ) -> StepCost:
     """One (chunked-)prefill launch: ``batch`` rows × ``chunk`` tokens each,
     resuming at cache position ``start``.
@@ -230,7 +239,7 @@ def prefill_chunk_cost(
     Closed form (plain attention families):
 
       flops = 2·n_active·tokens  +  4·h·dh·ctx_sum·L
-      bytes = 2·n_total (weights, read once per launch)
+      bytes = wb·n_total (weights, read once per launch)
               + 8·tokens·d·2·L (activations)
               + 2·ctx_sum·kh·dh·cb·L (KV write of the chunk + gather of the
                 attended context)
@@ -252,11 +261,11 @@ def prefill_chunk_cost(
     else:
         kv = (2.0 * ctx_sum * cfg.n_kv_heads * cfg.head_dim
               * cache_bytes_per_elem * cfg.n_layers)
-    hbm = 2.0 * n_total + act + kv
+    hbm = weight_bytes_per_elem * n_total + act + kv
     return StepCost(flops, hbm, {
         "linear": lin * moe_pad,
         "attn_executed": attn_x,
-        "weight_bytes": 2.0 * n_total,
+        "weight_bytes": weight_bytes_per_elem * n_total,
         "act_bytes": act,
         "kv_bytes": kv,
         "tokens": tokens,
@@ -271,6 +280,7 @@ def spec_verify_cost(
     s_ctx: int,
     draft_layers: int | None = None,
     cache_bytes_per_elem: float = 2.0,
+    weight_bytes_per_elem: float = 2.0,
 ) -> StepCost:
     """One speculative draft-and-verify round: k sequential drafter decode
     steps + one (k+1)-wide verify window of the served model.
@@ -283,9 +293,11 @@ def spec_verify_cost(
     draft_cfg = cfg
     if draft_layers and draft_layers != cfg.n_layers:
         draft_cfg = dataclasses.replace(cfg, n_layers=int(draft_layers))
-    d = decode_step_cost(draft_cfg, batch, s_ctx, cache_bytes_per_elem)
+    d = decode_step_cost(draft_cfg, batch, s_ctx, cache_bytes_per_elem,
+                         weight_bytes_per_elem)
     v = prefill_chunk_cost(cfg, batch, k + 1, start=int(s_ctx),
-                           cache_bytes_per_elem=cache_bytes_per_elem)
+                           cache_bytes_per_elem=cache_bytes_per_elem,
+                           weight_bytes_per_elem=weight_bytes_per_elem)
     return StepCost(
         k * d.flops + v.flops,
         k * d.hbm_bytes + v.hbm_bytes,

@@ -18,7 +18,11 @@ Speculative decoding note: with ``spec_k > 0`` the model prices every step
 as a full draft-and-verify round but credits only ``spec_accept_len``
 emissions per step, defaulting to 1.0 — the acceptance rate is a property
 of the model/workload the analytic layer cannot know, so speculation is
-never recommended unless the caller asserts a measured acceptance length.
+never recommended unless the caller feeds a measured acceptance length.
+The serving trace measures exactly that: pass
+``TraceRecorder.spec_accept_len()`` from a traced run (ISSUE 10 closed the
+PR 7 loop — ``launch/serve.py --autotune`` with ``--trace`` and a spec run
+re-ranks with the measured value).
 """
 from __future__ import annotations
 
@@ -95,6 +99,7 @@ def predict(
     spec_accept_len: float | None = None,
     paged: bool = False,
     cache_bytes_per_elem: float = 2.0,
+    weight_bytes_per_elem: float = 2.0,
 ) -> Prediction:
     """Simulate the scheduler's policy loop under ``knobs`` and return the
     predicted useful throughput.  Mirrors the "while" segment mode: a
@@ -107,9 +112,11 @@ def predict(
     emit = max(1.0, float(spec_accept_len or 1.0)) if k else 1.0
     if k:
         c = spec_verify_cost(cfg, k, w.n_slots, w.max_len,
-                             cache_bytes_per_elem=cache_bytes_per_elem)
+                             cache_bytes_per_elem=cache_bytes_per_elem,
+                             weight_bytes_per_elem=weight_bytes_per_elem)
     else:
-        c = decode_step_cost(cfg, w.n_slots, w.max_len, cache_bytes_per_elem)
+        c = decode_step_cost(cfg, w.n_slots, w.max_len, cache_bytes_per_elem,
+                             weight_bytes_per_elem)
     t_step = step_time(c, hw) + oh.step_s
     seg_fixed = oh.segment_s
     if paged:
@@ -151,7 +158,8 @@ def predict(
                 if s is not None and not s["live"]:
                     cost = prefill_chunk_cost(
                         cfg, 1, s["plen"],
-                        cache_bytes_per_elem=cache_bytes_per_elem)
+                        cache_bytes_per_elem=cache_bytes_per_elem,
+                        weight_bytes_per_elem=weight_bytes_per_elem)
                     t += oh.prefill_s + step_time(cost, hw)
                     n_pre += 1
                     s["pre"] = 0
@@ -179,7 +187,8 @@ def predict(
                     ctx += (width - len(rows)) * b * (b + 1) / 2.0
                     cost = prefill_chunk_cost(
                         cfg, width, b, ctx_sum=ctx,
-                        cache_bytes_per_elem=cache_bytes_per_elem)
+                        cache_bytes_per_elem=cache_bytes_per_elem,
+                        weight_bytes_per_elem=weight_bytes_per_elem)
                     t += oh.prefill_s + step_time(cost, hw)
                     n_pre += 1
                     for s, real, _ in rows:
@@ -258,10 +267,14 @@ def autotune(
     spec_accept_len: float | None = None,
     paged: bool = False,
     spec_ks: tuple[int, ...] = (0,),
+    cache_bytes_per_elem: float = 2.0,
+    weight_bytes_per_elem: float = 2.0,
 ) -> AutotuneResult:
     """Rank ``candidates`` (default grid when None) by predicted tok/s."""
     cands = candidates or default_candidates(workload, paged, spec_ks)
-    preds = [predict(kc, workload, cfg, hw, oh, spec_accept_len, paged)
+    preds = [predict(kc, workload, cfg, hw, oh, spec_accept_len, paged,
+                     cache_bytes_per_elem=cache_bytes_per_elem,
+                     weight_bytes_per_elem=weight_bytes_per_elem)
              for kc in cands]
     ranked = sorted(preds, key=lambda p: p.tok_s, reverse=True)
     return AutotuneResult(best=ranked[0].knobs, ranked=ranked)

@@ -135,9 +135,20 @@ class ServeConfig:
     kv_layout: str = "dense"  # "dense" | "paged"
     block_len: int = 16
     # speculative decoding for the continuous scheduler (PR 5); None = plain
-    # one-token-per-step decode.  Families without chunk-resume (and the
-    # int8-quantized cache) fall back with ``engine.spec_skip_reason``.
+    # one-token-per-step decode.  Families without chunk-resume fall back
+    # with ``engine.spec_skip_reason``.
     spec: SpecConfig | None = None
+    # int8 block-sparse weight quantization (ISSUE 10): "int8" rewrites every
+    # linear projection (attention q/k/v/o, FFN, LM head) at engine
+    # construction via ``core.sonic_layers.quantize_serve_params`` — weights
+    # then live int8 with one fp32 scale per kept block, and every slot
+    # program runs through the same quantized tree (no new compiled traces:
+    # program shapes are unchanged).  ``weight_quant_sparsity`` > 0 also
+    # block-prunes (balanced top-|L1|, the SONIC C1 structure); block=None
+    # picks the largest power-of-two block dividing each dim.
+    weight_quant: str = "none"  # "none" | "int8"
+    weight_quant_sparsity: float = 0.0
+    weight_quant_block: tuple[int, int] | None = None
     # run the scheduler's allocator/table/commitment invariant checks at
     # the end of every segment (PR 6) — on by default in the stress suites,
     # off in production paths (it walks host dicts, never the device)
@@ -176,16 +187,31 @@ class ServeEngine:
                 "kv_layout='paged' is not wired for meshed serving yet "
                 "(pool sharding constraints missing — see ROADMAP)"
             )
+        assert sc.weight_quant in ("none", "int8"), sc.weight_quant
+        raw_params = params  # pre-quantization tree (drafter derivation)
+        if sc.weight_quant == "int8":
+            # one-time host-side conversion: every slot program reads
+            # ``self.params``, so the whole serving surface (prefill, decode,
+            # spec verify, drafters) runs the quantized tree without any new
+            # compiled trace shapes
+            from repro.core.sonic_layers import quantize_serve_params
+
+            params = quantize_serve_params(
+                params, sparsity=sc.weight_quant_sparsity,
+                block=sc.weight_quant_block,
+            )
         self.arch, self.params, self.plan, self.sc = arch, params, plan, sc
         self.cfg = cfg or arch.cfg
 
         # ------------------------- speculative decoding (drafter resolution)
         #
         # ``sc.spec`` attaches a drafter derived from the served weights.
-        # Families whose cache cannot chunk-resume / cursor-roll-back (and
-        # the int8-quantized cache, whose verify window would attend
-        # dequantized values) fall back to plain decode with the reason in
-        # ``spec_skip_reason`` — mirroring the chunked-prefill fallback.
+        # Families whose cache cannot chunk-resume / cursor-roll-back fall
+        # back to plain decode with the reason in ``spec_skip_reason`` —
+        # mirroring the chunked-prefill fallback.  The int8-quantized KV
+        # cache is NOT excluded (ISSUE 10): verify rows attend the same
+        # dequantized values sequential decode attends, so greedy spec
+        # output stays bit-identical to sequential int8-KV decoding.
         self.spec = sc.spec
         self.spec_skip_reason = ""
         self.draft_params = None
@@ -196,14 +222,7 @@ class ServeEngine:
                 "exact-match against the greedy verifier (rejection-sampling "
                 "speculation for temperature > 0 is a ROADMAP item)"
             )
-            if plan.cache_quant_int8:
-                reason = ("speculative verification is not wired for the "
-                          "int8-quantized KV cache (the verify window must "
-                          "recompute exactly what sequential decode would; "
-                          "attending dequantized values breaks the "
-                          "bit-identical greedy contract)")
-            else:
-                reason = arch.spec_decode_skip_reason()
+            reason = arch.spec_decode_skip_reason()
             if reason:
                 self.spec = None
                 self.spec_skip_reason = reason
@@ -226,9 +245,15 @@ class ServeEngine:
                 )
 
                 if self.spec.draft == "self":
+                    # derived from the RAW tree: the sparse conversion
+                    # re-densifies 3-D stacked kernels, which the int8
+                    # serving representation no longer has.  The drafter
+                    # therefore runs fp even under weight_quant — drafting
+                    # accuracy is a perf knob, verification is exact either
+                    # way.
                     self.draft_cfg = self.cfg
                     self.draft_params = sparse_draft_params(
-                        params, self.spec.draft_sparsity,
+                        raw_params, self.spec.draft_sparsity,
                         num_clusters=self.spec.draft_clusters,
                     )
                 else:  # "truncate:N"

@@ -66,8 +66,10 @@ exactly as before — retirement, streaming, and stats just account for the
 variable per-step width (``accepted_hist``).  Requests need ``spec.k``
 positions of max_len headroom (and ``spec.k`` extra mapped block capacity
 under the paged layout) for the rejected-tail overshoot the cursor rollback
-truncates.  Families that cannot chunk-resume (and int8-quant KV) fall back
-to plain decode with the reason in ``stats["spec_skip_reason"]``.
+truncates.  Families that cannot chunk-resume fall back to plain decode
+with the reason in ``stats["spec_skip_reason"]``; the int8-quantized KV
+cache runs both chunked prefill and speculation first-class (ISSUE 10 —
+every path attends the same dequantized cache values).
 
 Overcommit-safe serving (PR 6): the paged layout no longer maps a request's
 whole block budget at admission.  Admission claims only the blocks its
@@ -231,13 +233,7 @@ class ContinuousScheduler:
         self.chunked = self.prefill_chunk > 0
         self.stats_skip_reason = ""
         if self.chunked:
-            reason = ""
-            if engine.plan.cache_quant_int8:
-                reason = ("chunk-resume prefill is not wired for the int8-"
-                          "quantized KV cache (dense whole-prompt prefill "
-                          "attends exact fresh k/v)")
-            else:
-                reason = engine.arch.chunked_prefill_skip_reason()
+            reason = engine.arch.chunked_prefill_skip_reason()
             if reason:
                 log.warning(
                     "batched/chunked prefill disabled — falling back to "

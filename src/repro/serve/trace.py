@@ -63,6 +63,14 @@ class TraceRecorder:
                              else None)
         self.cache_bytes_per_elem = (
             1.03 if engine.plan.cache_quant_int8 else 2.0)
+        # int8 block-sparse serving weights (ISSUE 10): kept blocks move as
+        # int8 + one fp32 scale + one int32 index each (~1.01 bytes/elem at
+        # the 128-tile default), and pruned blocks never leave HBM — the
+        # density folds straight into the per-element price
+        sc = engine.sc
+        self.weight_bytes_per_elem = (
+            1.01 * (1.0 - sc.weight_quant_sparsity)
+            if getattr(sc, "weight_quant", "none") == "int8" else 2.0)
         self.events: list[PhaseRecord] = []
         # per-tenant emitted-token counters (PR 8): the billing basis —
         # the scheduler calls note_tenant_tokens once per live emission
@@ -86,7 +94,8 @@ class TraceRecorder:
         c = self._decode_memo.get(batch)
         if c is None:
             c = decode_step_cost(self.cfg, batch, self.max_len,
-                                 self.cache_bytes_per_elem)
+                                 self.cache_bytes_per_elem,
+                                 self.weight_bytes_per_elem)
             self._decode_memo[batch] = c
         return c
 
@@ -94,7 +103,8 @@ class TraceRecorder:
         c = self._spec_memo.get(batch)
         if c is None:
             c = spec_verify_cost(self.cfg, self.spec_k, batch, self.max_len,
-                                 self.draft_layers, self.cache_bytes_per_elem)
+                                 self.draft_layers, self.cache_bytes_per_elem,
+                                 self.weight_bytes_per_elem)
             self._spec_memo[batch] = c
         return c
 
@@ -112,7 +122,8 @@ class TraceRecorder:
         ctx = sum(chunk * s + chunk * (chunk + 1) / 2.0 for s in starts)
         ctx += (width - len(starts)) * chunk * (chunk + 1) / 2.0
         cost = prefill_chunk_cost(self.cfg, width, chunk, ctx_sum=ctx,
-                                  cache_bytes_per_elem=self.cache_bytes_per_elem)
+                                  cache_bytes_per_elem=self.cache_bytes_per_elem,
+                                  weight_bytes_per_elem=self.weight_bytes_per_elem)
         self.totals["prefill_tokens"] += real_tokens
         self.totals["prefill_launches"] += 1
         self._push(PhaseRecord("prefill", segment, width, chunk, real_tokens,
@@ -174,6 +185,17 @@ class TraceRecorder:
     def tokens_total(self) -> int:
         t = self.totals
         return int(t["prefill_tokens"] + t["decode_tokens"] + t["spec_tokens"])
+
+    def spec_accept_len(self) -> float | None:
+        """Measured mean emitted tokens per live speculative step (1..k+1),
+        or None when no speculative step ran.  This is the acceptance length
+        ``roofline/autotune.predict`` prices speculation with — feeding the
+        trace's measurement back closes the loop that PR 7 left open (the
+        default acceptance of 1.0 makes speculation never recommendable)."""
+        steps = self.totals["spec_live_steps"]
+        if steps <= 0:
+            return None
+        return float(self.totals["spec_tokens"]) / float(steps)
 
     def summary(self) -> dict:
         out = dict(self.totals)

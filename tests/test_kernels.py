@@ -240,6 +240,138 @@ def test_sparse_matvec_all_zero_rows_and_weights():
     assert (np.asarray(sparse_matvec(x, idx, jnp.zeros((64, 128)))) == 0).all()
 
 
+# --------------------------------------------- int8 weight-quant kernels
+#
+# ISSUE 10 satellite: the fused dequant-inside-kernel int8 variants at the
+# same decode-edge shapes the fp32 sweeps above cover — M=1 rows, off-tile
+# K/N, all-zero blocks (scale clamps to 1.0, dequantizes to exact zero),
+# and the density extremes.
+
+
+@pytest.mark.parametrize("m,k,n,block,sp", [
+    (16, 192, 320, (64, 64), 0.5),   # K/N not multiples of the 128 default
+    (1, 96, 128, (32, 64), 0.0),     # M=1 decode row, density 1
+    (3, 128, 384, (64, 128), 0.95),  # near the one-block-per-column floor
+    (5, 128, 128, (64, 64), 1.0),    # the floor itself
+])
+def test_block_sparse_int8_matmul_kernel_vs_ref(m, k, n, block, sp):
+    from repro.core.sonic_layers import make_block_sparse_int8
+    from repro.kernels.block_sparse_matmul.ops import block_sparse_matmul_int8
+    from repro.kernels.block_sparse_matmul.ref import (
+        block_sparse_matmul_int8_ref,
+    )
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+    qw = make_block_sparse_int8(w, sp, block)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    got = block_sparse_matmul_int8(x, qw, bm=8)
+    want = block_sparse_matmul_int8_ref(x, qw.values, qw.scales, qw.indices,
+                                        qw.k_blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m", [1, 2, 7])
+def test_sonic_matmul_int8_decode_dispatch(m):
+    """Flattened M below the tile threshold routes through the unpadded
+    int8 matvec kernel and stays exact vs the fp32 dequant oracle."""
+    from repro.core.sonic_layers import make_block_sparse_int8
+    from repro.kernels.sonic_matmul.ops import sonic_matmul_int8
+    from repro.kernels.sonic_matmul.ref import sonic_matmul_int8_ref
+
+    assert m < DECODE_M_THRESHOLD
+    w = jax.random.normal(jax.random.PRNGKey(0), (192, 320))
+    qw = make_block_sparse_int8(w, 0.5, (64, 64))
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, 192))
+    got = sonic_matmul_int8(x, qw)
+    want = sonic_matmul_int8_ref(x, qw.values, qw.scales, qw.indices,
+                                 qw.k_blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sonic_matvec_int8_shapes_and_zero_rows():
+    """1-D entry squeezes like the fp32 matvec; an all-zero decode row
+    produces exactly 0.0 through the int8 path."""
+    from repro.core.sonic_layers import make_block_sparse_int8
+    from repro.kernels.sonic_matmul.ops import sonic_matvec_int8
+    from repro.kernels.sonic_matmul.ref import sonic_matvec_int8_ref
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    qw = make_block_sparse_int8(w, 0.25, (32, 32))
+    for shape in [(128,), (3, 128)]:
+        x = jax.random.normal(jax.random.PRNGKey(1), shape)
+        got = sonic_matvec_int8(x, qw)
+        want = sonic_matvec_int8_ref(x, qw.values, qw.scales, qw.indices,
+                                     qw.k_blocks)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+    assert (np.asarray(sonic_matvec_int8(jnp.zeros((2, 128)), qw)) == 0).all()
+
+
+def test_int8_all_zero_blocks_quantize_to_exact_zero():
+    """An all-zero kept block gets scale 1.0 (not epsilon) and int8 value 0,
+    so it dequantizes to exactly 0.0 — and a fully zero weight yields an
+    exactly-zero product, not accumulated rounding noise."""
+    from repro.core.sonic_layers import (
+        make_block_sparse, make_block_sparse_int8, quantize_block_sparse,
+    )
+    from repro.kernels.block_sparse_matmul.ops import block_sparse_matmul_int8
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    w = w.at[:32, :32].set(0.0)  # one all-zero block, kept at sparsity 0
+    qw = quantize_block_sparse(make_block_sparse(w, 0.0, (32, 32)))
+    scales = np.asarray(qw.scales)
+    vals = np.asarray(qw.values)
+    idx = np.asarray(qw.indices)
+    zero_r = np.where(idx[0] == 0)[0]  # N-block 0 reading K-block 0
+    assert len(zero_r) == 1
+    assert scales[0, zero_r[0]] == 1.0
+    assert (vals[0, zero_r[0]] == 0).all()
+
+    qzero = make_block_sparse_int8(jnp.zeros((128, 128)), 0.5, (32, 32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128))
+    assert (np.asarray(block_sparse_matmul_int8(x, qzero, bm=8)) == 0.0).all()
+
+
+def test_int8_dequant_error_bounded_by_scale():
+    """Per-block scale = absmax/127: every dequantized element sits within
+    half a quantization step of the fp32 kept block."""
+    from repro.core.sonic_layers import make_block_sparse, quantize_block_sparse
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+    bw = make_block_sparse(w, 0.5, (64, 64))
+    qw = quantize_block_sparse(bw)
+    deq = np.asarray(qw.values, np.float32) * np.asarray(qw.scales)[:, :, None, None]
+    err = np.abs(deq - np.asarray(bw.values))
+    bound = 0.5 * np.asarray(qw.scales)[:, :, None, None] + 1e-7
+    assert (err <= bound).all()
+
+
+def test_int8_mode_linear_apply_kernel_vs_fallback():
+    """The 'block_sparse_int8' and 'sonic_int8' execution paths: Pallas
+    kernel ≡ jnp fallback, decode and prefill shapes."""
+    from repro.core.sonic_layers import (
+        SonicExecutionConfig, convert_linear, sonic_linear_apply,
+    )
+    import dataclasses
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    for mode in ("block_sparse_int8", "sonic_int8"):
+        kcfg = SonicExecutionConfig(mode=mode, use_kernel=True,
+                                    weight_sparsity=0.5, block=(32, 32))
+        fcfg = dataclasses.replace(kcfg, use_kernel=False)
+        p = convert_linear(w, kcfg)
+        for shape in [(2, 1, 128), (4, 16, 128)]:
+            x = jax.random.normal(jax.random.PRNGKey(2), shape)
+            got = sonic_linear_apply(p, x, kcfg)
+            want = sonic_linear_apply(p, x, fcfg)
+            assert got.shape == want.shape == (*shape[:-1], 128)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("frac", [0.0, 1.0])
 def test_topk_sparse_matmul_density_extremes(frac):
     """k = K reproduces the dense product exactly; k = 1 keeps only the

@@ -273,12 +273,28 @@ def test_spec_falls_back_on_unsupported_family():
     assert len(got[0]) == 4
 
 
-def test_spec_falls_back_under_int8_cache(arch_params):
+def test_spec_runs_first_class_under_int8_cache(arch_params, workload):
+    """The int8-quantized KV cache no longer disables speculation
+    (ISSUE 10): verify rows attend the same dequantized values sequential
+    decode attends, so draft-and-verify stays bit-identical to the
+    sequential int8-KV oracle."""
     arch, params = arch_params
     plan = dataclasses.replace(PLAN, cache_quant_int8=True)
-    sc = ServeConfig(max_len=MAX_LEN, spec=SpecConfig(k=2))
+    sc = ServeConfig(max_len=MAX_LEN, spec=SpecConfig(k=2, draft="truncate:1"))
     eng = ServeEngine(arch, params, plan, sc)
-    assert eng.spec is None and "int8" in eng.spec_skip_reason
+    assert eng.spec is not None and not eng.spec_skip_reason
+
+    oracle_eng = ServeEngine(arch, params, plan, ServeConfig(max_len=MAX_LEN))
+    prompts, news = [np.arange(1, 9, dtype=np.int32),
+                     np.arange(3, 8, dtype=np.int32)], [10, 6]
+    oracle = [
+        list(np.asarray(oracle_eng.generate(jnp.asarray(p)[None, :], n))[0])
+        for p, n in zip(prompts, news)
+    ]
+    got, sched = _run(eng, prompts, news, n_slots=2)
+    assert got == oracle
+    assert sched.stats["spec_steps"] > 0
+    assert sched.stats["spec_skip_reason"] == ""
 
 
 def test_spec_rejects_sampling_temperature(arch_params):

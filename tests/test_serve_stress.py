@@ -186,6 +186,67 @@ def test_random_workload_speculative_matches_oracle(engines, seed, spec):
             assert sched.allocator.n_free == sched.allocator.capacity
 
 
+@pytest.fixture(scope="module")
+def qengines(arch_params):
+    """int8-KV engines (ISSUE 10).  The oracle is the quant engine's OWN
+    sequential generate: the contract is bit-identity against the
+    sequential int8-KV path (every prefill variant attends the dequantized
+    cache it just wrote), not closeness to the fp32 cache."""
+    arch, params = arch_params
+    qplan = MeshPlan(cache_quant_int8=True)
+
+    def mk(layout, spec=None):
+        sc = ServeConfig(max_len=MAX_LEN, kv_layout=layout,
+                         block_len=BLOCK_LEN, spec=spec)
+        return ServeEngine(arch, params, qplan, sc)
+
+    out = {"dense": mk("dense"), "paged": mk("paged"), "oracle": mk("dense")}
+    for layout in ("dense", "paged"):
+        out[f"{layout}:spec_k2"] = mk(layout, SPEC_CONFIGS["spec_k2"])
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_random_workload_quantized_cache_matches_quant_oracle(qengines, seed):
+    """ISSUE 10: under the int8-quantized KV cache the full admission
+    matrix — dense/paged × chunked prefill × plain/speculative decode —
+    runs first-class (no fallback) and stays bit-identical to the
+    sequential int8-KV oracle, with the allocator and rollback invariants
+    checked after every segment inside ``_run_sched``."""
+    print(f"stress seed={seed} quant=int8")  # shown on failure — CI repro
+    rng = np.random.RandomState(seed)
+    prompts, news = _draw_workload(rng, n_requests=int(rng.randint(5, 9)))
+    want = _oracle(qengines, prompts, news)
+    for layout in ("dense", "paged"):
+        for spec in (None, "spec_k2"):
+            srng = np.random.RandomState(seed + 100)
+            # plain runs pin chunked admission on (the composition the
+            # fallback removal unlocked); spec runs coin-flip it so
+            # draft-and-verify also interleaves with mid-prefill slots
+            chunked = True if spec is None else bool(srng.randint(2))
+            handles, sched = _run_sched(
+                qengines, layout, prompts, news, srng,
+                chunked=chunked, spec=spec,
+            )
+            tag = (layout, spec or "plain",
+                   "chunked" if chunked else "per-request")
+            for h, w, n in zip(handles, want, news):
+                assert h.done and len(h.tokens) == n
+                assert h.tokens == w, (*tag, h.rid, h.tokens, w)
+            st = sched.stats
+            assert st["admitted"] == st["retired"] == len(prompts)
+            if chunked:  # the int8 fallback is gone — chunked really ran
+                assert sched.chunked and not st["chunked_skip_reason"]
+                assert st["chunks_prefilled"] >= len(prompts)
+            if spec is not None:
+                assert sched.spec is not None
+                assert not st["spec_skip_reason"]
+                assert st["spec_steps"] > 0
+            if layout == "paged":
+                assert sched.allocator.n_free == sched.allocator.capacity
+                assert st["blocks_in_use_peak"] <= sched.n_blocks
+
+
 def test_paged_pool_serves_more_context_than_it_holds(engines):
     """The memory-ceiling claim (ISSUE 3): a pool strictly smaller than the
     dense slot cache serves a workload whose summed live context exceeds
